@@ -1,0 +1,59 @@
+"""Framework extra — smoke-scale train/decode step wall time per arch.
+
+Not a paper table; tracks end-to-end step cost of the LM stack so §Perf
+regressions show up in ``benchmarks.run`` output.
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="qwen3_4b,mixtral_8x22b,xlstm_1_3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import emit, time_fn
+    from repro.configs.base import get_smoke_config
+    from repro.distributed.parallel import single_device_parallel
+    from repro.models.api import build_model
+    from repro.train.step import TrainStepConfig, make_train_state, make_train_step
+
+    for arch in args.archs.split(","):
+        cfg = get_smoke_config(arch)
+        bundle = build_model(cfg, single_device_parallel())
+        params, opt = make_train_state(bundle, TrainStepConfig(), jax.random.key(0))
+        step = jax.jit(make_train_step(bundle, TrainStepConfig()))
+        if cfg.is_encoder_decoder:
+            batch = {
+                "tokens": jnp.zeros((args.batch, args.seq + 1), jnp.int32),
+                "frames": jnp.zeros(
+                    (args.batch, cfg.frontend_len, cfg.d_model), jnp.bfloat16
+                ),
+            }
+        elif cfg.frontend == "patch_stub":
+            batch = {
+                "tokens": jnp.zeros((args.batch, args.seq + 1), jnp.int32),
+                "patch_emb": jnp.zeros(
+                    (args.batch, cfg.frontend_len, cfg.d_model), jnp.bfloat16
+                ),
+            }
+        else:
+            batch = {"tokens": jnp.zeros((args.batch, args.seq + 1), jnp.int32)}
+
+        def run(p, o, b):
+            return step(p, o, b)[2]["loss"]
+
+        sec = time_fn(run, params, opt, batch, warmup=1, iters=3)
+        toks = args.batch * args.seq
+        emit(
+            f"train_step_smoke_{arch}", sec, tokens=toks,
+            tokens_per_sec=f"{toks/sec:.3e}",
+        )
+
+
+if __name__ == "__main__":
+    main()

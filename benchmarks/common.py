@@ -1,0 +1,30 @@
+"""Shared benchmark helpers: wall timing + CSV emit.
+
+CPU numbers are *indicative* (TPU is the target); the harness per paper
+table is the deliverable — the same scripts run unmodified on a TPU pod.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median seconds per call (after warmup, fully blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, **derived) -> None:
+    """One CSV row: name,seconds,k=v,..."""
+    kv = ",".join(f"{k}={v}" for k, v in derived.items())
+    print(f"BENCH,{name},{seconds:.6f},{kv}")

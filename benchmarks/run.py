@@ -1,0 +1,71 @@
+"""Benchmark orchestrator — one bench per paper table/figure.
+
+Each bench runs in its own subprocess so the fake-device count can differ
+(jax locks the device count at first init).  Output lines starting with
+``BENCH,`` form the machine-readable record; everything is teed by the
+caller into bench_output.txt.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+BENCHES = [
+    # (module, args, fake_devices) — paper Fig. 3 weak scaling over device counts
+    ("benchmarks.bench_weak_scaling", ["--keys-per-device", "131072"], 1),
+    ("benchmarks.bench_weak_scaling", ["--keys-per-device", "131072"], 2),
+    ("benchmarks.bench_weak_scaling", ["--keys-per-device", "131072"], 4),
+    ("benchmarks.bench_weak_scaling", ["--keys-per-device", "131072"], 8),
+    # Fig. 4 duplicates sweep
+    ("benchmarks.bench_duplicates", ["--keys", "262144"], 8),
+    # Fig. 5 phase breakdown
+    ("benchmarks.bench_phases", ["--keys", "262144"], 8),
+    # §5.3 build vs query
+    ("benchmarks.bench_build_vs_query", ["--keys", "262144"], 8),
+    # §5 SOTA comparison
+    ("benchmarks.bench_sota_table", ["--keys", "262144"], 8),
+    # framework extra: LM step cost
+    ("benchmarks.bench_train_smoke", [], 1),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    args = ap.parse_args()
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    failures = 0
+    for module, margs, devices in BENCHES:
+        if args.fast:
+            margs = [a if not a.isdigit() else str(max(1024, int(a) // 8)) for a in margs]
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+        env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + env.get("PYTHONPATH", "")
+        print(f"=== {module} devices={devices} {' '.join(margs)}", flush=True)
+        t0 = time.time()
+        proc = subprocess.run(
+            [sys.executable, "-m", module, *margs],
+            env=env,
+            cwd=repo,
+            capture_output=True,
+            text=True,
+        )
+        sys.stdout.write(proc.stdout)
+        if proc.returncode != 0:
+            failures += 1
+            sys.stdout.write(proc.stderr[-3000:])
+            print(f"=== FAILED {module} rc={proc.returncode}")
+        else:
+            print(f"=== done in {time.time()-t0:.1f}s", flush=True)
+    print(f"benchmarks complete: {len(BENCHES) - failures}/{len(BENCHES)} ok")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Continuous-batching serving demo over the smoke-scale qwen3 model.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+
+def main() -> None:
+    from repro.launch import serve as serve_mod
+
+    sys.argv = [
+        "serve",
+        "--arch", "qwen3_4b",
+        "--requests", "10",
+        "--slots", "4",
+        "--prompt-len", "24",
+        "--max-new", "12",
+    ]
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

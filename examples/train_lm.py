@@ -1,0 +1,41 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the full production stack — config registry, HashGraph-dedup data
+pipeline, AdamW + cosine schedule, remat train step, async checkpointing
+— at a CPU-runnable scale (qwen3 family, ~100M params).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    from repro.launch import train as train_mod
+
+    sys.argv = [
+        "train",
+        "--arch", "qwen3_4b",
+        "--smoke",
+        # ~100M params: 12 layers × d_model 512 over the qwen3 smoke family
+        "--layers", "12",
+        "--d-model", "512",
+        "--vocab", "32000",
+        "--steps", str(args.steps),
+        "--batch", "8",
+        "--seq", "256",
+        "--microbatches", "2",
+        "--dedup", "local",
+        "--checkpoint-dir", args.checkpoint_dir,
+        "--checkpoint-every", "100",
+    ]
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

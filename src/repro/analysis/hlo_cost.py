@@ -1,0 +1,485 @@
+"""Trip-count-aware cost analysis of optimized (post-SPMD) HLO text.
+
+``Compiled.cost_analysis()`` counts each while-loop body **once**; a
+scan-over-layers train step under-reports FLOPs by ~num_layers ×
+microbatches (verified: a 10-iteration scanned matmul reports 1 matmul of
+FLOPs).  The roofline would be garbage without correcting this, so this
+module re-derives costs from the HLO text, propagating loop multipliers:
+
+* ``while`` trip counts come from ``backend_config known_trip_count``
+  (XLA annotates counted loops), falling back to the ``constant(N)``
+  compared in the loop condition;
+* **FLOPs**: every ``dot`` (2 · prod(out_dims) · prod(lhs contracting
+  dims)), walked through fusion/call/conditional/while bodies;
+* **HBM bytes**: per *top-level* instruction in each executed computation
+  (entry + loop bodies + branches): Σ operand bytes + output bytes —
+  fusions count as one instruction (their internals stay in registers /
+  VMEM), matching XLA's own bytes-accessed model;
+* **wire bytes**: collective ops weighted by replica-group size:
+  all-gather out·(g-1)/g, reduce-scatter out·(g-1), all-reduce
+  out·2(g-1)/g, all-to-all out·(g-1)/g, collective-permute out.
+
+Shapes in a post-partitioning SPMD module are per-device, so every number
+reported here is per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# ops whose operands/outputs move no real bytes
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _parse_shapes(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shapes: list[tuple[str, list[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_shapes: list  # [(dtype, dims)]
+    operands: list  # operand %names
+    attrs: str  # raw remainder (attributes)
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    table: dict  # name -> Instr (including parameters w/ shapes)
+
+
+_KNOWN_OPCODES = None
+
+
+def _split_instr(rest: str) -> Optional[tuple]:
+    """'<shape> opcode(operands), attrs' → (shapes, opcode, operands, attrs)."""
+    m = re.match(r"^\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+([\w\-]+)\((.*)$",
+                 rest)
+    if not m:
+        return None
+    shape_txt, opcode, tail = m.groups()
+    # operands run to the matching close paren of the opcode call
+    depth = 1
+    for i, ch in enumerate(tail):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    operand_txt, attrs = tail[:i], tail[i + 1:]
+    shapes = _parse_shapes(shape_txt)
+    operands = _OPERAND_RE.findall(operand_txt)
+    return shapes, opcode, operands, attrs
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and ("->" in line) and line.rstrip().endswith("{"):
+            cur = Computation(hdr.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        parsed = _split_instr(rest)
+        if parsed is None:
+            continue
+        shapes, opcode, operands, attrs = parsed
+        ins = Instr(name, opcode, shapes, operands, attrs, line)
+        cur.instrs.append(ins)
+        cur.table[name] = ins
+    return comps
+
+
+def _called_comps(ins: Instr) -> list[str]:
+    names = []
+    for key in ("calls=", "body=", "condition=", "branch_computations={",
+                "to_apply="):
+        idx = ins.attrs.find(key)
+        while idx >= 0:
+            seg = ins.attrs[idx + len(key):]
+            names += _OPERAND_RE.findall(seg.split("}", 1)[0] if "{" in key else
+                                         seg.split(",", 1)[0])
+            idx = -1
+    return names
+
+
+def _trip_count(ins: Instr, comps: dict) -> int:
+    m = _TRIP_RE.search(ins.attrs)
+    if m:
+        return int(m.group(1))
+    # fallback: largest integer constant in the condition computation
+    cond = None
+    mc = re.search(r"condition=%([\w.\-]+)", ins.attrs)
+    if mc and mc.group(1) in comps:
+        consts = []
+        for i2 in comps[mc.group(1)].instrs:
+            cm = _CONST_RE.search(i2.raw)
+            if cm:
+                consts.append(int(cm.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _group_size(ins: Instr, default: int) -> int:
+    m = _GROUPS_RE.search(ins.attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = _IOTA_RE.search(ins.attrs)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_n = 1
+    for _, dims in ins.out_shapes:
+        for d in dims:
+            out_n *= d
+    contract = 1
+    m = _LHS_CONTRACT_RE.search(ins.attrs)
+    if m and ins.operands:
+        lhs = comp.table.get(ins.operands[0])
+        if lhs is not None and lhs.out_shapes:
+            dims = lhs.out_shapes[0][1]
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2.0 * out_n * contract
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    wire_by_kind: dict = dataclasses.field(default_factory=dict)
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+    fused_region_bytes_saved: float = 0.0  # flash-fusable HBM traffic avoided
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _operand_bytes(ins: Instr, comp: Computation, loop_trips: int = 1) -> int:
+    """Σ operand bytes.  ``loop_trips``: trip count of the enclosing while —
+    an operand whose leading dim equals it is a scan-xs stack consumed one
+    slice per iteration (XLA fuses the dynamic-slice into the consumer, so
+    the raw operand shape is the FULL stack); charge one slice."""
+    total = 0
+    for op in ins.operands:
+        ref = comp.table.get(op)
+        if ref is None:
+            continue
+        b = _shape_bytes(ref.out_shapes)
+        if (
+            loop_trips > 1
+            and ref.out_shapes
+            and ref.out_shapes[0][1]
+            and ref.out_shapes[0][1][0] == loop_trips
+        ):
+            b //= loop_trips
+        total += b
+    return total
+
+
+def _score_shaped(ins: Instr) -> bool:
+    """Attention score/probability tensors: rank ≥ 4 with a long trailing
+    (kv-sequence) dim.  q/k/v/out end in head_dim ≤ 256; the residual
+    stream is rank-3 — only flash-kernel-internal tensors match."""
+    for _, dims in ins.out_shapes:
+        if len(dims) >= 4 and dims[-1] >= 512:
+            return True
+    return False
+
+
+_PIN_MIN = 1 << 20  # 1 MiB — below this, re-reads are noise
+_PIN_MAX = 64 << 20  # 64 MiB — VMEM-pinnable budget (v5e: 128 MiB VMEM)
+
+
+def _invariant_slots(comp: Computation) -> set:
+    """Tuple indices the while body passes through unchanged (x → x).
+
+    The body ROOT tuple's operand j being ``get-tuple-element(param),
+    index=j`` marks slot j loop-invariant — weights re-read every
+    iteration.  The Pallas recurrence kernels (kernels/slstm.py) pin such
+    blocks in VMEM, so the roofline charges them once per loop.
+    """
+    if not comp.instrs:
+        return set()
+    root = comp.instrs[-1]
+    if root.opcode != "tuple":
+        return set()
+    out = set()
+    for j, op in enumerate(root.operands):
+        ref = comp.table.get(op)
+        if ref is None or ref.opcode != "get-tuple-element":
+            continue
+        m = re.search(r"index=(\d+)", ref.attrs)
+        if m and int(m.group(1)) == j:
+            out.add(j)
+    return out
+
+
+def analyze(
+    hlo: str,
+    num_devices: int,
+    entry: Optional[str] = None,
+    *,
+    fused_attention_shapes: bool = False,
+    pin_loop_invariants: bool = False,
+) -> CostSummary:
+    """``fused_attention_shapes``: also classify score-shaped tensors as
+    flash-kernel-internal.  Autodiff drops named scopes from backward op
+    metadata (``transpose(jvp())``), so the attention backward — an equally
+    standard VMEM-resident kernel — needs the shape rule.  Callers enable
+    it only for attention-family archs (never for mLSTM, whose quadratic
+    gate matrices must be fixed by chunking, not accounting)."""
+    comps = parse_module(hlo)
+    if not comps:
+        return CostSummary()
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%([\w.\-]+)", hlo, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    summary = CostSummary()
+
+    def _elems(shapes) -> int:
+        n = 0
+        for _, dims in shapes:
+            e = 1
+            for d in dims:
+                e *= d
+            n += e
+        return n
+
+    def _is_rs_pattern(ins: Instr, comp: Computation, g: int) -> bool:
+        """all-reduce fully consumed by per-device slices == the
+        reduce-scatter the TPU backend forms (XLA:CPU lacks the
+        reduce-scatter-creation pass, so the dry-run HLO shows AR+slice;
+        charging AR bytes would double-count the wire).  Variadic ARs are
+        followed through their get-tuple-element consumers."""
+        if ins.opcode != "all-reduce":
+            return False
+
+        def consumers_of(name: str):
+            return [o for o in comp.instrs if name in o.operands]
+
+        frontier = [(ins.name, _elems(ins.out_shapes))]
+        checked = 0
+        while frontier:
+            name, elems = frontier.pop()
+            for c in consumers_of(name):
+                if c.opcode == "get-tuple-element":
+                    frontier.append((c.name, _elems(c.out_shapes)))
+                    continue
+                if c.opcode == "tuple":
+                    return False  # escapes via loop carry — keep AR cost
+                checked += 1
+                if _elems(c.out_shapes) * g > elems:
+                    return False
+        return checked > 0
+
+    def flops_walk(comp_name: str, mult: float, seen: tuple):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen:
+            return
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                tc = _trip_count(ins, comps)
+                mb = re.search(r"body=%([\w.\-]+)", ins.attrs)
+                if _TRIP_RE.search(ins.attrs) is None:
+                    summary.unknown_trip_loops += 1
+                if mb:
+                    flops_walk(mb.group(1), mult * tc, seen + (comp_name,))
+            elif ins.opcode in ("fusion", "call", "conditional", "map",
+                                "reduce", "reduce-window", "sort", "scatter",
+                                "select-and-scatter", "custom-call"):
+                for sub in _called_comps(ins):
+                    if "condition" not in sub:
+                        flops_walk(sub, mult, seen + (comp_name,))
+            elif ins.opcode == "dot":
+                summary.flops += mult * _dot_flops(ins, comp)
+            kind = (
+                ins.opcode[: -len("-start")]
+                if ins.opcode.endswith("-start")
+                else ins.opcode
+            )
+            if kind in _COLLECTIVE_KINDS:
+                g = _group_size(ins, num_devices)
+                if g <= 1:
+                    continue
+                out_b = _shape_bytes(ins.out_shapes)
+                if ins.opcode.endswith("-start"):
+                    # async start shapes repeat (operand, result); halve.
+                    out_b //= 2
+                if kind == "all-gather":
+                    wire = out_b * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    wire = out_b * (g - 1)
+                elif kind == "all-reduce":
+                    if _is_rs_pattern(ins, comp, g):
+                        kind = "all-reduce(rs)"  # TPU backend forms RS here
+                        wire = out_b * (g - 1) / g
+                    else:
+                        wire = out_b * 2 * (g - 1) / g
+                elif kind == "all-to-all":
+                    wire = out_b * (g - 1) / g
+                else:
+                    wire = out_b
+                summary.wire_bytes += mult * wire
+                summary.wire_by_kind[kind] = summary.wire_by_kind.get(kind, 0.0) + mult * wire
+                summary.collective_counts[kind] = summary.collective_counts.get(kind, 0) + 1
+
+    def bytes_walk(comp_name: str, mult: float, seen: tuple, trips: int = 1):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen:
+            return
+        scoped = {
+            i.name
+            for i in comp.instrs
+            if "flash_fusable" in i.attrs
+            or (fused_attention_shapes and _score_shaped(i))
+        }
+        pinned: set = set()
+        if pin_loop_invariants and trips > 1:
+            inv = _invariant_slots(comp)
+            for i2 in comp.instrs:
+                if i2.opcode != "get-tuple-element":
+                    continue
+                m2 = re.search(r"index=(\d+)", i2.attrs)
+                if m2 and int(m2.group(1)) in inv:
+                    b2 = _shape_bytes(i2.out_shapes)
+                    if _PIN_MIN <= b2 <= _PIN_MAX:
+                        pinned.add(i2.name)
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                tc = _trip_count(ins, comps)
+                mb = re.search(r"body=%([\w.\-]+)", ins.attrs)
+                mc = re.search(r"condition=%([\w.\-]+)", ins.attrs)
+                if mb:
+                    bytes_walk(mb.group(1), mult * tc, seen + (comp_name,), tc)
+                if mc:
+                    bytes_walk(mc.group(1), mult * tc, seen + (comp_name,), tc)
+                continue
+            if ins.opcode == "conditional":
+                for sub in _called_comps(ins):
+                    bytes_walk(sub, mult, seen + (comp_name,), trips)
+                continue
+            if ins.opcode in _FREE_OPS:
+                continue
+            if ins.name in scoped:
+                # fused-kernel region (validated Pallas flash attention):
+                # internals stay in VMEM on the TPU target — only bytes
+                # entering the region from outside count here; region
+                # outputs are charged at their unscoped consumers.
+                ext = 0
+                for op in ins.operands:
+                    ref = comp.table.get(op)
+                    if ref is not None and op not in scoped:
+                        b = _shape_bytes(ref.out_shapes)
+                        if (
+                            trips > 1
+                            and ref.out_shapes
+                            and ref.out_shapes[0][1]
+                            and ref.out_shapes[0][1][0] == trips
+                        ):
+                            b //= trips
+                        elif op in pinned:
+                            b //= trips
+                        ext += b
+                summary.hbm_bytes += mult * ext
+                summary.fused_region_bytes_saved += mult * (
+                    _operand_bytes(ins, comp, trips)
+                    + _shape_bytes(ins.out_shapes)
+                    - ext
+                )
+                continue
+            ob = 0
+            for op in ins.operands:
+                ref = comp.table.get(op)
+                if ref is None:
+                    continue
+                b = _shape_bytes(ref.out_shapes)
+                if (
+                    trips > 1
+                    and ref.out_shapes
+                    and ref.out_shapes[0][1]
+                    and ref.out_shapes[0][1][0] == trips
+                ):
+                    b //= trips
+                elif op in pinned:
+                    # VMEM-pinned loop-invariant (Pallas recurrence kernel
+                    # contract): one HBM read per loop, not per iteration.
+                    b //= trips
+                    summary.fused_region_bytes_saved += mult * b * (trips - 1)
+                ob += b
+            out_b = _shape_bytes(ins.out_shapes)
+            if (
+                trips > 1
+                and ins.out_shapes
+                and ins.out_shapes[0][1]
+                and ins.out_shapes[0][1][0] == trips
+            ):
+                # scan-ys stacking: dynamic-update-slice writes ONE slice
+                # per iteration into the (trips, ...) buffer.
+                out_b //= trips
+            summary.hbm_bytes += mult * (ob + out_b)
+
+    flops_walk(entry, 1.0, ())
+    bytes_walk(entry, 1.0, ())
+    return summary

@@ -1,0 +1,130 @@
+"""Roofline table from dry-run JSON records.
+
+Terms per (arch × shape × mesh), all **seconds per step, per device**
+(the SPMD module is per-device; wire bytes are per-device):
+
+    compute    = HLO_FLOPs / 197e12            (TPU v5e bf16 peak)
+    memory     = HLO_bytes / 819e9             (HBM bandwidth)
+    collective = wire_bytes / 50e9             (ICI link bandwidth)
+
+The *step-time estimate* is ``max`` of the three (no-overlap roofline);
+``roofline fraction`` = compute / max — 1.0 means compute-bound at peak,
+the score the perf loop drives up.  ``MFU_est`` uses the 6·N·D (train) /
+2·N·D (inference) convention over the same step time:
+
+    MFU = MODEL_FLOPS / (chips · 197e12 · step_time)
+
+``useful`` = MODEL_FLOPS / (HLO_FLOPs · chips): how much compiled compute
+is model math (catches remat recompute, dense-MoE waste, attention not in
+the 6ND convention — useful > 1 is possible for long-seq attention-heavy
+cells where 6ND undercounts).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load_records(directory: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def derive(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    t = rec["terms_s"]
+    step = max(t.values())
+    chips = rec["chips"]
+    mf = rec["model_flops_global"]
+    return {
+        "arch": rec["arch"],
+        "cell": rec["cell"],
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "compute_s": t["compute_s"],
+        "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"],
+        "step_s": step,
+        "bottleneck": rec["bottleneck"].replace("_s", ""),
+        "fraction": t["compute_s"] / step if step else 0.0,
+        "mfu": mf / (chips * PEAK_FLOPS * step) if step else 0.0,
+        "useful": rec.get("useful_flops_ratio", 0.0),
+        "temp_gib": rec.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+        / 2**30,
+        "arg_gib": rec.get("memory_analysis", {}).get("argument_size_in_bytes", 0)
+        / 2**30,
+    }
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | cell | mesh | compute (s) | memory (s) | collective (s) | "
+        "step est (s) | bottleneck | roofline frac | MFU est | useful | temp GiB |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['step_s']:.3e} "
+            f"| {r['bottleneck']} | {r['fraction']:.3f} | {r['mfu']:.3f} "
+            f"| {r['useful']:.2f} | {r['temp_gib']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def summarize(directory: str, mesh: Optional[str] = None) -> list[dict]:
+    rows = [d for d in (derive(r) for r in load_records(directory)) if d]
+    if mesh:
+        rows = [r for r in rows if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["cell"], r["mesh"]))
+    return rows
+
+
+def worst_cells(rows: list[dict], n: int = 5) -> list[dict]:
+    return sorted(rows, key=lambda r: r["fraction"])[:n]
+
+
+def most_collective_bound(rows: list[dict], n: int = 5) -> list[dict]:
+    return sorted(
+        rows, key=lambda r: r["collective_s"] / max(r["step_s"], 1e-30), reverse=True
+    )[:n]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None, choices=[None, "16x16", "2x16x16"])
+    ap.add_argument("--pick", action="store_true", help="print hillclimb candidates")
+    args = ap.parse_args()
+    rows = summarize(args.dir, args.mesh)
+    print(markdown_table(rows))
+    skipped = [r for r in load_records(args.dir) if r.get("status") == "skipped"]
+    errored = [r for r in load_records(args.dir) if r.get("status") == "error"]
+    print(f"\nok={len(rows)} skipped={len(skipped)} error={len(errored)}")
+    for r in errored:
+        print(f"  ERROR {r['arch']}.{r['cell']}.{r['multi_pod']}: {r['error'][:140]}")
+    if args.pick:
+        print("\nworst roofline fraction:")
+        for r in worst_cells(rows):
+            print(f"  {r['arch']}.{r['cell']}.{r['mesh']} frac={r['fraction']:.3f}")
+        print("\nmost collective-bound:")
+        for r in most_collective_bound(rows):
+            print(
+                f"  {r['arch']}.{r['cell']}.{r['mesh']} "
+                f"coll={r['collective_s']/max(r['step_s'],1e-30):.2f} of step"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpointing substrate: sharded npz + manifest, async, elastic restore."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,176 @@
+"""Checkpoint manager: atomic, async, shard-aware, elastically restorable.
+
+Layout (one directory per step)::
+
+    <dir>/step_00000042/
+        manifest.json     # tree paths, shapes, dtypes, step, user extra
+        arrays.npz        # one entry per leaf, keyed by manifest index
+
+Guarantees:
+
+* **Atomicity** — everything is written into ``step_X.tmp/`` and the dir is
+  ``os.rename``d into place last; a crash mid-write never corrupts the
+  latest checkpoint (rename is atomic on POSIX).
+* **Async** — ``save()`` device_gets the tree (cheap: shards are already
+  in host-reachable memory on CPU; on TPU this is the D2H copy) and hands
+  serialization to a writer thread, so the train loop isn't blocked on
+  disk. ``wait()`` drains the queue; the manager never drops a enqueued
+  save.
+* **Elastic restore** — arrays are stored *unsharded* (global view); on
+  restore they are ``device_put`` against the **target** shardings, which
+  may belong to a different mesh shape / device count than the writer's
+  (re-sharding happens on load).  The trainer resumes the data pipeline
+  from the stored step counter — the loader is a pure function of step, so
+  resume is exact.
+* **Retention** — keeps the newest ``keep`` checkpoints, deleting older
+  ones after a successful save.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._errors: list = []
+        self._thread: Optional[threading.Thread] = None
+        if async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # -- paths ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[len("step_"):]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save ---------------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> None:
+        """Snapshot ``tree`` at ``step``.  Returns once data is off-device."""
+        paths, leaves, _ = _flatten(tree)
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        manifest = {
+            "step": int(step),
+            "paths": paths,
+            "shapes": [list(a.shape) for a in host],
+            "dtypes": [str(a.dtype) for a in host],
+            "extra": extra or {},
+        }
+        if self.async_write:
+            self._q.put((step, manifest, host))
+        else:
+            self._write(step, manifest, host)
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            try:
+                self._write(*item)
+            except Exception as e:  # surfaced on wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, manifest: dict, host: list) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **{str(i): a for i, a in enumerate(host)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def wait(self) -> None:
+        """Drain pending async writes; re-raise the first writer error."""
+        if self.async_write:
+            self._q.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def close(self) -> None:
+        if self._thread is not None:
+            self._q.join()
+            self._q.put(None)
+            self._thread.join()
+            self._thread = None
+
+    # -- restore --------------------------------------------------------------------
+    def restore(
+        self,
+        like: Any,
+        step: Optional[int] = None,
+        shardings: Optional[Any] = None,
+    ) -> tuple[int, Any, dict]:
+        """Load a checkpoint into the structure of ``like``.
+
+        ``shardings``: optional pytree of ``NamedSharding`` matching ``like``
+        — pass the *current* mesh's shardings to restore elastically onto a
+        different device count than the writer used.
+        """
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        paths, leaves, treedef = _flatten(like)
+        if manifest["paths"] != paths:
+            raise ValueError(
+                "checkpoint tree mismatch:\n"
+                f"  stored:  {manifest['paths'][:5]}...\n  wanted: {paths[:5]}..."
+            )
+        arrays = [data[str(i)] for i in range(len(paths))]
+        if shardings is not None:
+            sh_leaves = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec")
+            )
+            out = [jax.device_put(a, s) for a, s in zip(arrays, sh_leaves)]
+        else:
+            out = [jax.numpy.asarray(a) for a in arrays]
+        return step, jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

@@ -1,0 +1,22 @@
+"""Architecture configs (one module per assigned arch) + shape suite."""
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPE_SUITE,
+    ArchConfig,
+    ShapeCell,
+    all_configs,
+    get_config,
+    get_smoke_config,
+    shape_cell,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPE_SUITE",
+    "ArchConfig",
+    "ShapeCell",
+    "all_configs",
+    "get_config",
+    "get_smoke_config",
+    "shape_cell",
+]

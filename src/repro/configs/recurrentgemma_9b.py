@@ -1,0 +1,59 @@
+"""recurrentgemma-9b — Griffin hybrid: RG-LRU blocks + local attention, 2:1.
+
+[arXiv:2402.19427] 38L d_model=4096 16H (kv=1) d_ff=12288, local window 2048.
+Pattern (rglru, rglru, local) — two recurrent blocks per local-attention block.
+38 layers = 12 periods of 3 + ... → paper uses 38; we need divisibility, so the
+pattern is applied as 12 periods (36 layers) + 1 extra (rglru, rglru) pair is
+not representable with a fixed period — we follow the published block ratio
+with 39 layers rounded down to 36? No: we keep EXACTLY 38 layers using period
+(rglru, rglru, local) × 12 + (rglru, rglru) tail, encoded as pattern length 19
+applied twice: (r,r,l, r,r,l, r,r,l, r,r,l, r,r,l, r,r,l, r) — see PATTERN.
+"""
+from repro.configs.base import ArchConfig
+
+# 38 layers, ratio 2 recurrent : 1 local-attn (Griffin). Period of 19 applied
+# twice keeps the exact layer count and the published ratio (13 recurrent + 6
+# local per period → 26 + 12 + ... = 38 total with the tail recurrent block).
+_PERIOD = (
+    "rglru", "rglru", "local",
+    "rglru", "rglru", "local",
+    "rglru", "rglru", "local",
+    "rglru", "rglru", "local",
+    "rglru", "rglru", "local",
+    "rglru", "rglru", "local",
+    "rglru",
+)
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    block_pattern=_PERIOD,
+    local_window=2048,
+    rnn_width=4096,
+    conv_width=4,
+    notes="Local attention window 2048 + RG-LRU ⇒ O(window) decode state; "
+    "runs long_500k. kv=1 local attention uses the seq-sharded decode path.",
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="recurrentgemma-9b-smoke",
+    family="hybrid",
+    num_layers=3,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=1,
+    d_ff=256,
+    vocab_size=512,
+    head_dim=32,
+    block_pattern=("rglru", "rglru", "local"),
+    local_window=32,
+    rnn_width=128,
+    conv_width=4,
+)

@@ -1,0 +1,46 @@
+"""Core HashGraph library — the paper's contribution.
+
+Single-device CSR hash table (``hashgraph``), global binned partitioning
+(``partition``), capacity-padded hierarchical all-to-all (``exchange``),
+and the multi-device build/query (``multi_hashgraph``).
+"""
+from repro.core.hashing import murmur3_u32, murmur3_stream, hash_to_buckets, fmix32
+from repro.core.hashgraph import (
+    EMPTY_KEY,
+    HashGraph,
+    build,
+    build_from_buckets,
+    query_count_sorted,
+    query_count_probe,
+    lookup_first,
+    contains,
+    intersect_join_size,
+)
+from repro.core.multi_hashgraph import (
+    DistributedHashGraph,
+    build_sharded,
+    query_sharded,
+    contains_sharded,
+    join_size_sharded,
+)
+
+__all__ = [
+    "EMPTY_KEY",
+    "HashGraph",
+    "DistributedHashGraph",
+    "murmur3_u32",
+    "murmur3_stream",
+    "hash_to_buckets",
+    "fmix32",
+    "build",
+    "build_from_buckets",
+    "query_count_sorted",
+    "query_count_probe",
+    "lookup_first",
+    "contains",
+    "intersect_join_size",
+    "build_sharded",
+    "query_sharded",
+    "contains_sharded",
+    "join_size_sharded",
+]

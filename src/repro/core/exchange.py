@@ -1,0 +1,173 @@
+"""Phases 2–3 of Alg. 2 — capacity-padded, hierarchical all-to-all exchange.
+
+The paper reorganizes each device's keys into per-destination contiguous
+partitions (a counting sort, Alg. 2 lines 19-34) and then issues a ragged
+NCCL all-to-all (line 38).  XLA collectives are static-shape, so the TPU
+adaptation packs each destination partition into a fixed ``capacity`` slot
+padded with a sentinel — precisely the MoE token-dispatch trick, which is
+why :func:`dispatch` / :func:`combine` here also back the MoE layer in
+``repro.models.moe`` (the paper's technique as a first-class framework
+primitive).
+
+On a multi-axis mesh the exchange is *hierarchical*: one dense
+``lax.all_to_all`` per mesh axis, transposing a ``(A, B, ..., capacity)``
+partition grid one axis at a time.  This maps onto per-axis ICI rings
+instead of emulating NVSwitch's flat crossbar (DESIGN.md §2).
+
+Everything in this module runs *inside* ``shard_map`` — arrays are the
+per-device shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("perm", "slot", "keep", "num_dropped"),
+    meta_fields=("num_dest", "capacity"),
+)
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """Bookkeeping to reverse a dispatch (answers → original local order)."""
+
+    perm: jax.Array  # (N,) argsort-by-destination permutation
+    slot: jax.Array  # (N,) flat slot index in the packed buffer (kept rows)
+    keep: jax.Array  # (N,) bool, False for capacity-dropped rows
+    num_dropped: jax.Array  # () int32 — overflow diagnostics
+    num_dest: int
+    capacity: int
+
+
+def axis_sizes(axis_names: Sequence[str]) -> tuple[int, ...]:
+    return tuple(jax.lax.axis_size(a) for a in axis_names)
+
+
+def device_count(axis_names: Sequence[str]) -> int:
+    n = 1
+    for a in axis_names:
+        n *= jax.lax.axis_size(a)
+    return n
+
+
+def my_rank(axis_names: Sequence[str]) -> jax.Array:
+    """Row-major composite rank over ``axis_names`` (major axis first)."""
+    rank = jnp.int32(0)
+    for a in axis_names:
+        rank = rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return rank
+
+
+def pack_by_destination(
+    payloads: Sequence[jax.Array],
+    dest: jax.Array,
+    num_dest: int,
+    capacity: int,
+    fills: Sequence,
+) -> tuple[list[jax.Array], Route]:
+    """Counting-sort ``payloads`` by destination into a (num_dest*capacity,) buffer.
+
+    Mirrors Alg. 2 lines 19-31: the stable argsort by destination *is* the
+    ``BuffCounter``/``BuffOffset`` counting sort (same output, no atomics).
+    Rows beyond ``capacity`` per destination are dropped and counted
+    (``num_dropped``) — Phase 1's balanced split keeps this at zero for any
+    sane slack; callers assert on it in tests.
+    """
+    n = dest.shape[0]
+    dest = dest.astype(jnp.int32)
+    perm = jnp.argsort(dest, stable=True)
+    sdest = dest[perm]
+    # First row of each destination partition in the sorted order.
+    starts = jnp.searchsorted(sdest, jnp.arange(num_dest, dtype=jnp.int32), side="left")
+    rank_in_part = jnp.arange(n, dtype=jnp.int32) - starts[sdest]
+    keep = rank_in_part < capacity
+    slot = sdest * capacity + jnp.where(keep, rank_in_part, 0)
+    scatter_idx = jnp.where(keep, slot, num_dest * capacity)  # OOB -> dropped
+    packed = []
+    for p, fill in zip(payloads, fills):
+        p = jnp.asarray(p)
+        buf = jnp.full((num_dest * capacity,) + p.shape[1:], fill, dtype=p.dtype)
+        packed.append(buf.at[scatter_idx].set(p[perm], mode="drop"))
+    route = Route(
+        perm=perm,
+        slot=slot,
+        keep=keep,
+        num_dropped=jnp.sum(~keep).astype(jnp.int32),
+        num_dest=num_dest,
+        capacity=capacity,
+    )
+    return packed, route
+
+
+def all_to_all_hierarchical(
+    x: jax.Array, axis_names: Sequence[str]
+) -> jax.Array:
+    """Dense all-to-all of ``x`` of shape (D, capacity, ...) over ≥1 mesh axes.
+
+    ``D`` must equal the product of the axis sizes, partitions ordered
+    row-major by ``axis_names`` (major first — matching :func:`my_rank`).
+    One ``lax.all_to_all`` per axis; after all hops, row ``r`` holds the
+    partition sent by device ``r``.
+    """
+    sizes = axis_sizes(axis_names)
+    d = 1
+    for s in sizes:
+        d *= s
+    if x.shape[0] != d:
+        raise ValueError(f"leading dim {x.shape[0]} != prod(axis sizes) {d}")
+    rest = x.shape[1:]
+    x = x.reshape(*sizes, *rest)
+    for i, a in enumerate(axis_names):
+        x = jax.lax.all_to_all(x, a, split_axis=i, concat_axis=i, tiled=True)
+    return x.reshape(d, *rest)
+
+
+def dispatch(
+    payloads: Sequence[jax.Array],
+    dest: jax.Array,
+    axis_names: Sequence[str],
+    capacity: int,
+    fills: Sequence,
+) -> tuple[list[jax.Array], Route]:
+    """Send each payload row to device ``dest[row]``.
+
+    Returns per-device received buffers of shape ``(D * capacity,)`` —
+    row-major by *source* device — plus the :class:`Route` to send answers
+    back.  Padding rows carry the corresponding ``fills`` sentinel.
+    """
+    num_dest = device_count(axis_names)
+    packed, route = pack_by_destination(payloads, dest, num_dest, capacity, fills)
+    received = []
+    for buf in packed:
+        b = buf.reshape(num_dest, capacity, *buf.shape[1:])
+        b = all_to_all_hierarchical(b, axis_names)
+        received.append(b.reshape(num_dest * capacity, *buf.shape[1:]))
+    return received, route
+
+
+def combine(
+    answers: jax.Array,
+    route: Route,
+    axis_names: Sequence[str],
+    fill,
+) -> jax.Array:
+    """Inverse of :func:`dispatch` for per-slot answers.
+
+    ``answers`` is laid out like the received buffers ``(D*capacity,)``;
+    the reverse all-to-all restores the sender's packed layout, then the
+    route unpacks to the original local row order.  Dropped rows get
+    ``fill``.
+    """
+    d, cap = route.num_dest, route.capacity
+    rest = answers.shape[1:]
+    back = all_to_all_hierarchical(answers.reshape(d, cap, *rest), axis_names)
+    back = back.reshape(d * cap, *rest)
+    keep = route.keep.reshape((-1,) + (1,) * len(rest))
+    ans_sorted = jnp.where(keep, back[route.slot], fill)
+    out = jnp.empty_like(ans_sorted)
+    return out.at[route.perm].set(ans_sorted)

@@ -1,0 +1,248 @@
+"""Single-device HashGraph (Green [12]) — CSR hash table, TPU-native build.
+
+A HashGraph stores a static hash table as the CSR of the bipartite graph
+(hash values × keys):
+
+* ``offsets`` — length ``V + 2``; bucket ``v``'s keys live at
+  ``keys[offsets[v] : offsets[v+1]]``.  Bucket ``V`` is a *trash* bucket that
+  holds padding sentinels (used when this table is one shard of a
+  distributed HashGraph and the all-to-all delivered capacity padding).
+* ``keys``   — the input keys grouped by bucket.
+* ``values`` — payload per key (defaults to the original input index, the
+  "value" the paper attaches for join operations).
+
+TPU adaptation (see DESIGN.md §2): the CUDA build uses ``AtomicAdd`` for the
+bucket histogram and for placement (Alg. 1).  TPUs expose no global-memory
+atomics, so the build is a **counting sort realized with ``jax.lax.sort``**:
+a stable lexicographic sort by (bucket, key) produces exactly the CSR
+``keys`` array, and ``searchsorted`` over the sorted bucket ids produces
+``offsets``.  The output is identical to the atomic build up to intra-bucket
+order (which CUDA atomics leave nondeterministic; ours is deterministic).
+
+Sorting *within* the bucket (``num_keys=2``) is a beyond-paper refinement:
+it lets queries use per-bucket binary search (:func:`query_count_sorted`)
+instead of the paper's linear bucket scan (:func:`query_count_probe`), which
+matters once duplicate counts grow (paper §5.4 observes quadratic decay for
+the linear-scan intersection).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+# Sentinel key marking capacity padding (reserved; valid keys must be < 2^32-1).
+EMPTY_KEY = 0xFFFFFFFF
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("offsets", "keys", "values"),
+    meta_fields=("table_size", "seed", "sorted_within_bucket"),
+)
+@dataclasses.dataclass(frozen=True)
+class HashGraph:
+    """CSR hash table.  ``offsets.shape == (table_size + 2,)``."""
+
+    offsets: jax.Array  # (V+2,) int32, monotone
+    keys: jax.Array  # (N,) uint32, grouped by bucket
+    values: jax.Array  # (N,) int32 payload
+    table_size: int  # V (static)
+    seed: int  # murmur seed (static)
+    sorted_within_bucket: bool  # True => binary-search queries are valid
+
+    @property
+    def capacity(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def num_valid(self) -> jax.Array:
+        """Number of non-padding keys (start of the trash bucket)."""
+        return self.offsets[self.table_size]
+
+    def bucket_of(self, queries: jax.Array) -> jax.Array:
+        return hashing.hash_to_buckets(queries, self.table_size, seed=self.seed)
+
+
+def build_from_buckets(
+    keys: jax.Array,
+    buckets: jax.Array,
+    table_size: int,
+    values: Optional[jax.Array] = None,
+    *,
+    seed: int = hashing.DEFAULT_SEED,
+    sort_within_bucket: bool = True,
+) -> HashGraph:
+    """Build a HashGraph given precomputed bucket ids.
+
+    ``buckets`` may contain ``table_size`` to mark padding entries (they land
+    in the trash bucket and are excluded from every query).
+    """
+    keys = keys.astype(jnp.uint32)
+    buckets = buckets.astype(jnp.int32)
+    if values is None:
+        values = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    num_keys = 2 if sort_within_bucket else 1
+    sorted_buckets, sorted_keys, sorted_values = jax.lax.sort(
+        (buckets, keys, values), num_keys=num_keys, is_stable=True
+    )
+    # offsets[v] = first index whose bucket id >= v ;  offsets[V+1] = N.
+    offsets = jnp.searchsorted(
+        sorted_buckets, jnp.arange(table_size + 2, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    return HashGraph(
+        offsets=offsets,
+        keys=sorted_keys,
+        values=sorted_values,
+        table_size=table_size,
+        seed=seed,
+        sorted_within_bucket=sort_within_bucket,
+    )
+
+
+def build(
+    keys: jax.Array,
+    table_size: int,
+    values: Optional[jax.Array] = None,
+    *,
+    seed: int = hashing.DEFAULT_SEED,
+    sort_within_bucket: bool = True,
+) -> HashGraph:
+    """Hash ``keys`` and build the CSR table (Alg. 1, TPU-native form)."""
+    buckets = hashing.hash_to_buckets(keys, table_size, seed=seed)
+    return build_from_buckets(
+        keys,
+        buckets,
+        table_size,
+        values,
+        seed=seed,
+        sort_within_bucket=sort_within_bucket,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Queries
+# ---------------------------------------------------------------------------
+
+
+def _segment_searchsorted(
+    sorted_keys: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    q: jax.Array,
+    side: str,
+) -> jax.Array:
+    """Vectorized binary search of ``q[i]`` within ``sorted_keys[lo[i]:hi[i]]``.
+
+    Branchless bisection with a fixed iteration count (log2 of array size),
+    so it lowers to a small unrolled loop of gathers — no data-dependent
+    control flow, TPU-friendly.
+    """
+    n = sorted_keys.shape[0]
+    # A range of length L needs bit_length(L) halvings to reach lo == hi
+    # (bit_length(n-1) is one short when a bucket spans the whole array —
+    # found by hypothesis on a 2-key table with both keys in one bucket).
+    iters = max(1, int(n).bit_length())
+    lo = lo.astype(jnp.int32)
+    hi = hi.astype(jnp.int32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) >> 1
+        v = sorted_keys[jnp.clip(mid, 0, n - 1)]
+        if side == "left":
+            go_right = v < q
+        else:
+            go_right = v <= q
+        active = lo < hi
+        new_lo = jnp.where(active & go_right, mid + 1, lo)
+        new_hi = jnp.where(active & ~go_right, mid, hi)
+        return new_lo, new_hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo
+
+
+def query_count_sorted(
+    hg: HashGraph, queries: jax.Array, buckets: Optional[jax.Array] = None
+) -> jax.Array:
+    """Exact multiplicity of each query key via per-bucket binary search.
+
+    Requires ``sorted_within_bucket=True``.  O(log bucket_len) gathers per
+    query with no cap on duplicates — the beyond-paper query path.
+
+    ``buckets`` overrides the bucket mapping (distributed shards map keys to
+    local buckets through the global split points, not ``hash % V``).
+    """
+    if not hg.sorted_within_bucket:
+        raise ValueError("query_count_sorted needs a bucket-sorted HashGraph")
+    q = queries.astype(jnp.uint32)
+    b = hg.bucket_of(q) if buckets is None else buckets.astype(jnp.int32)
+    starts = hg.offsets[b]
+    ends = hg.offsets[b + 1]
+    left = _segment_searchsorted(hg.keys, starts, ends, q, side="left")
+    right = _segment_searchsorted(hg.keys, starts, ends, q, side="right")
+    return (right - left).astype(jnp.int32)
+
+
+def query_count_probe(
+    hg: HashGraph,
+    queries: jax.Array,
+    max_probe: int = 64,
+    buckets: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Paper-faithful query: linear scan of the query's bucket.
+
+    ``max_probe`` statically caps the scanned bucket length (buckets longer
+    than the cap under-count — callers size the cap from the duplicate
+    statistics, as the paper sizes its experiments).  This is the access
+    pattern the ``bucket_probe`` Pallas kernel implements in VMEM blocks.
+    """
+    q = queries.astype(jnp.uint32)
+    b = hg.bucket_of(q) if buckets is None else buckets.astype(jnp.int32)
+    starts = hg.offsets[b]
+    ends = hg.offsets[b + 1]
+    n = hg.keys.shape[0]
+    idx = starts[:, None] + jnp.arange(max_probe, dtype=jnp.int32)[None, :]
+    in_bucket = idx < ends[:, None]
+    vals = hg.keys[jnp.clip(idx, 0, n - 1)]
+    hits = in_bucket & (vals == q[:, None])
+    return jnp.sum(hits, axis=1).astype(jnp.int32)
+
+
+def lookup_first(
+    hg: HashGraph, queries: jax.Array, buckets: Optional[jax.Array] = None
+) -> jax.Array:
+    """Value of the first matching key per query, or -1 (join probe)."""
+    if not hg.sorted_within_bucket:
+        raise ValueError("lookup_first needs a bucket-sorted HashGraph")
+    q = queries.astype(jnp.uint32)
+    b = hg.bucket_of(q) if buckets is None else buckets.astype(jnp.int32)
+    starts = hg.offsets[b]
+    ends = hg.offsets[b + 1]
+    left = _segment_searchsorted(hg.keys, starts, ends, q, side="left")
+    n = hg.keys.shape[0]
+    found = (left < ends) & (hg.keys[jnp.clip(left, 0, n - 1)] == q)
+    return jnp.where(found, hg.values[jnp.clip(left, 0, n - 1)], jnp.int32(-1))
+
+
+def contains(hg: HashGraph, queries: jax.Array) -> jax.Array:
+    """Membership test per query key."""
+    return lookup_first(hg, queries) >= 0
+
+
+def intersect_join_size(hg_build: HashGraph, hg_query: HashGraph) -> jax.Array:
+    """Total inner-join size between two HashGraphs sharing a bucket space.
+
+    The paper's query phase (§3.3): for every key in the query table, count
+    its occurrences in the build table; the sum is the join cardinality.
+    Padding (trash-bucket) entries contribute zero.
+    """
+    valid = jnp.arange(hg_query.keys.shape[0]) < hg_query.num_valid
+    counts = query_count_sorted(hg_build, hg_query.keys)
+    return jnp.sum(jnp.where(valid, counts, 0).astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32))

@@ -1,0 +1,229 @@
+"""Multi-device HashGraph — Alg. 2 of the paper, on a TPU mesh.
+
+Every function here runs *inside* ``shard_map`` over the device axes named
+in ``axis_names`` (the hash table treats the whole mesh — e.g. ``("pod",
+"data", "model")`` — as a flat 1-D device space; the exchange itself is
+hierarchical per axis, see ``repro.core.exchange``).
+
+Build (:func:`build_sharded`) follows the paper's four phases:
+
+1. **Partitioning** — local coarse-bin histogram, ``psum``, balanced splits
+   (``repro.core.partition``).
+2. **Reorganization** — counting-sort keys by destination device.
+3. **Movement** — capacity-padded hierarchical all-to-all.
+4. **Creation** — single-device HashGraph per shard over its hash range.
+
+Query (:func:`query_sharded`) is the paper's query: route query keys with
+the *same* splits, intersect against the local table, route counts back.
+
+Static-shape note: a device's hash-range width ``splits[d+1]-splits[d]`` is
+data-dependent, but XLA needs a static local table size.  We allocate
+``local_range_cap = ceil(HR/D) * range_slack`` buckets and clamp rebased
+hash values into the last bucket.  Both build and query clamp through the
+same deterministic map, so matching is exact even when clamping fires
+(clamped buckets just get longer lists — HashGraph's collision handling
+absorbs this, the paper's headline robustness property).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exchange, hashing, hashgraph, partition
+from repro.core.hashgraph import EMPTY_KEY, HashGraph
+from repro.utils import cdiv
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("local", "hash_splits", "num_dropped"),
+    meta_fields=("hash_range", "seed", "local_range_cap", "axis_names"),
+)
+@dataclasses.dataclass(frozen=True)
+class DistributedHashGraph:
+    """Per-device shard of the distributed table (inside shard_map)."""
+
+    local: HashGraph  # this device's CSR over its hash range
+    hash_splits: jax.Array  # (D+1,) int32 — identical on all devices
+    num_dropped: jax.Array  # () int32 — capacity overflow during build
+    hash_range: int
+    seed: int
+    local_range_cap: int
+    axis_names: tuple
+
+
+def default_capacity(n_local: int, num_devices: int, slack: float) -> int:
+    """Per-destination slot size: balanced share × slack, lane-aligned."""
+    base = cdiv(n_local, num_devices)
+    cap = int(base * slack) + 8
+    return cdiv(cap, 8) * 8
+
+
+def _local_buckets(
+    keys: jax.Array,
+    lo: jax.Array,
+    hash_range: int,
+    local_cap: int,
+    seed: int,
+) -> jax.Array:
+    """Rebasedhash → local bucket id, sentinel keys → trash bucket."""
+    h = hashing.hash_to_buckets(keys, hash_range, seed=seed)
+    rebased = jnp.clip(h - lo, 0, local_cap - 1)
+    is_pad = keys == jnp.uint32(EMPTY_KEY)
+    return jnp.where(is_pad, jnp.int32(local_cap), rebased)
+
+
+def build_sharded(
+    keys: jax.Array,
+    *,
+    hash_range: int,
+    axis_names: Sequence[str],
+    values: Optional[jax.Array] = None,
+    num_bins: Optional[int] = None,
+    capacity_slack: float = 1.25,
+    range_slack: float = 1.5,
+    seed: int = hashing.DEFAULT_SEED,
+) -> DistributedHashGraph:
+    """Build the distributed HashGraph from this device's local ``keys``.
+
+    ``values`` (payload, e.g. original global row ids for joins) ride along
+    through the exchange.  Call inside ``shard_map``.
+    """
+    axis_names = tuple(axis_names)
+    keys = keys.astype(jnp.uint32)
+    n_local = keys.shape[0]
+    num_devices = exchange.device_count(axis_names)
+    if values is None:
+        # Globalize the default payload: original row id within this shard,
+        # offset by the shard's rank so values are unique across devices.
+        values = exchange.my_rank(axis_names) * n_local + jnp.arange(
+            n_local, dtype=jnp.int32
+        )
+
+    # ---- Phase 1: partitioning --------------------------------------------
+    bins_g = num_bins or partition.choose_num_bins(hash_range, num_devices)
+    h = hashing.hash_to_buckets(keys, hash_range, seed=seed)
+    hist = partition.local_bin_histogram(h, bins_g, hash_range)
+    ghist = jax.lax.psum(hist, axis_names)
+    splits = partition.balanced_hash_splits(ghist, num_devices, hash_range)
+
+    # ---- Phase 2: reorganization ------------------------------------------
+    dest = partition.destination_of(h, splits)
+
+    # ---- Phase 3: movement -------------------------------------------------
+    capacity = default_capacity(n_local, num_devices, capacity_slack)
+    (rkeys, rvalues), route = exchange.dispatch(
+        (keys, values),
+        dest,
+        axis_names,
+        capacity,
+        fills=(jnp.uint32(EMPTY_KEY), jnp.int32(-1)),
+    )
+
+    # ---- Phase 4: local HashGraph creation ---------------------------------
+    local_cap = int(cdiv(hash_range, num_devices) * range_slack)
+    rank = exchange.my_rank(axis_names)
+    lo = splits[rank]
+    buckets = _local_buckets(rkeys, lo, hash_range, local_cap, seed)
+    local = hashgraph.build_from_buckets(
+        rkeys, buckets, local_cap, rvalues, seed=seed, sort_within_bucket=True
+    )
+    return DistributedHashGraph(
+        local=local,
+        hash_splits=splits,
+        num_dropped=jax.lax.psum(route.num_dropped, axis_names),
+        hash_range=hash_range,
+        seed=seed,
+        local_range_cap=local_cap,
+        axis_names=axis_names,
+    )
+
+
+def query_sharded(
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    *,
+    capacity_slack: float = 1.25,
+    paper_faithful_probe: bool = False,
+    max_probe: int = 64,
+) -> jax.Array:
+    """Multiplicity of each local query key in the distributed table.
+
+    Phases (paper §3.3 "Querying Multi-GPU HashGraph"): route queries by the
+    *build* splits, count against the local shard, route counts back.
+    Returns an int32 array aligned with ``queries``.
+    """
+    axis_names = dhg.axis_names
+    queries = queries.astype(jnp.uint32)
+    n_local = queries.shape[0]
+    num_devices = exchange.device_count(axis_names)
+
+    h = hashing.hash_to_buckets(queries, dhg.hash_range, seed=dhg.seed)
+    dest = partition.destination_of(h, dhg.hash_splits)
+    capacity = default_capacity(n_local, num_devices, capacity_slack)
+    (rq,), route = exchange.dispatch(
+        (queries,), dest, axis_names, capacity, fills=(jnp.uint32(EMPTY_KEY),)
+    )
+
+    rank = exchange.my_rank(axis_names)
+    lo = dhg.hash_splits[rank]
+    rbuckets = _local_buckets(rq, lo, dhg.hash_range, dhg.local_range_cap, dhg.seed)
+    if paper_faithful_probe:
+        counts = hashgraph.query_count_probe(
+            dhg.local, rq, max_probe=max_probe, buckets=rbuckets
+        )
+    else:
+        counts = hashgraph.query_count_sorted(dhg.local, rq, buckets=rbuckets)
+    # Padding slots probe the trash bucket; force their count to zero anyway.
+    counts = jnp.where(rq == jnp.uint32(EMPTY_KEY), 0, counts)
+    return exchange.combine(counts, route, axis_names, fill=jnp.int32(0))
+
+
+def contains_sharded(
+    dhg: DistributedHashGraph, queries: jax.Array, **kw
+) -> jax.Array:
+    """Membership test for each local query key."""
+    return query_sharded(dhg, queries, **kw) > 0
+
+
+def build_query_hashgraph_sharded(
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    *,
+    capacity_slack: float = 1.25,
+) -> HashGraph:
+    """Paper-literal query phase 1: a *second* HashGraph from the query set,
+    sharing the build table's splits (used by the list-intersection path and
+    the build-vs-query benchmark)."""
+    axis_names = dhg.axis_names
+    queries = queries.astype(jnp.uint32)
+    num_devices = exchange.device_count(axis_names)
+    h = hashing.hash_to_buckets(queries, dhg.hash_range, seed=dhg.seed)
+    dest = partition.destination_of(h, dhg.hash_splits)
+    capacity = default_capacity(queries.shape[0], num_devices, capacity_slack)
+    (rq,), _ = exchange.dispatch(
+        (queries,), dest, axis_names, capacity, fills=(jnp.uint32(EMPTY_KEY),)
+    )
+    rank = exchange.my_rank(axis_names)
+    lo = dhg.hash_splits[rank]
+    rbuckets = _local_buckets(rq, lo, dhg.hash_range, dhg.local_range_cap, dhg.seed)
+    return hashgraph.build_from_buckets(
+        rq, rbuckets, dhg.local_range_cap, seed=dhg.seed, sort_within_bucket=True
+    )
+
+
+def join_size_sharded(
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    **kw,
+) -> jax.Array:
+    """Global inner-join cardinality |build ⋈ query| (paper's intersection).
+
+    Sum of per-query multiplicities, ``psum``-reduced across the mesh.
+    """
+    counts = query_sharded(dhg, queries, **kw)
+    return jax.lax.psum(jnp.sum(counts), dhg.axis_names)

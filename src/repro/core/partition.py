@@ -1,0 +1,100 @@
+"""Phase 1 of Alg. 2 — global binning and balanced hash-range partitioning.
+
+Each device histograms its local keys into ``BINS_G`` coarse bins over the
+global hash range, the histograms are ``psum``-reduced across the device
+axis, and the global CDF is searched for split points so each device owns a
+contiguous hash range holding ≈ ``N / DEVICES`` keys (paper §3.3 Phase 1).
+
+Differences from the CUDA version (DESIGN.md §2):
+
+* the histogram increment is a deterministic XLA scatter-add (the Pallas
+  kernel in ``repro.kernels.histogram`` provides the VPU compare-tile
+  version for the hot path);
+* ``Reduce``/``BCast`` over PCIe (Alg. 2 lines 10/16) collapse into a single
+  ``psum`` — under SPMD every device computes identical split points from
+  the reduced histogram, so no broadcast is needed;
+* the binary search is ``jnp.searchsorted`` instead of a host-side search.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import cdiv
+
+
+def choose_num_bins(hash_range: int, num_devices: int, align: int = 128) -> int:
+    """Paper's guidance: ``BINS_G = O(sqrt(HR))``, with ``BINS_G > DEVICES``.
+
+    Rounded to a multiple of ``align`` (lane width) for the histogram kernel.
+    """
+    raw = int(math.isqrt(max(1, hash_range)))
+    raw = max(raw, 4 * num_devices, align)
+    raw = min(raw, hash_range)  # never more bins than hash values
+    return cdiv(raw, align) * align
+
+
+def bin_size_for(hash_range: int, num_bins: int) -> int:
+    return cdiv(hash_range, num_bins)
+
+
+def local_bin_histogram(
+    buckets: jax.Array, num_bins: int, hash_range: int
+) -> jax.Array:
+    """Histogram of hash values into ``num_bins`` coarse bins (Alg. 2 l.6-8)."""
+    bsz = bin_size_for(hash_range, num_bins)
+    bins = (buckets.astype(jnp.int32) // jnp.int32(bsz)).clip(0, num_bins - 1)
+    return jnp.zeros((num_bins,), jnp.int32).at[bins].add(1)
+
+
+def _balanced_targets(total: jax.Array, num_devices: int) -> jax.Array:
+    """``floor(d * total / DEVICES)`` for d = 1..DEVICES-1 without overflow.
+
+    ``d * total`` can exceed int32; decompose ``total = q*D + r`` so every
+    intermediate stays below ``2^31`` (d, r < DEVICES <= 4096).
+    """
+    d = jnp.arange(1, num_devices, dtype=jnp.int32)
+    q = total // num_devices
+    r = total % num_devices
+    return d * q + (d * r) // num_devices
+
+
+def balanced_hash_splits(
+    global_hist: jax.Array, num_devices: int, hash_range: int
+) -> jax.Array:
+    """Split the hash range so each device receives ≈ N/DEVICES keys.
+
+    Returns ``splits`` of shape ``(DEVICES + 1,)`` with ``splits[0] == 0`` and
+    ``splits[-1] == hash_range``; device ``d`` owns hash values in
+    ``[splits[d], splits[d+1])``.  Splits land on bin boundaries (the paper's
+    ``BinSplits``), which is what makes the coarse histogram sufficient.
+    """
+    num_bins = global_hist.shape[0]
+    bsz = bin_size_for(hash_range, num_bins)
+    prefix = jnp.cumsum(global_hist.astype(jnp.int32))  # inclusive CDF
+    total = prefix[-1]
+    targets = _balanced_targets(total, num_devices)
+    # First bin index whose inclusive CDF reaches the target → device boundary
+    # is the *end* of that bin.
+    split_bins = jnp.searchsorted(prefix, targets, side="left").astype(jnp.int32) + 1
+    # bin_index * bin_size can slightly exceed int32 when HR ~ 2^31; the true
+    # value always fits uint32, so compute there and clamp before casting back.
+    prod = split_bins.astype(jnp.uint32) * jnp.uint32(bsz)
+    hash_splits = jnp.minimum(prod, jnp.uint32(hash_range)).astype(jnp.int32)
+    # Monotone repair under extreme skew (empty devices allowed).
+    hash_splits = jax.lax.cummax(hash_splits)
+    zero = jnp.zeros((1,), jnp.int32)
+    top = jnp.full((1,), hash_range, jnp.int32)
+    return jnp.concatenate([zero, hash_splits, top])
+
+
+def destination_of(buckets: jax.Array, hash_splits: jax.Array) -> jax.Array:
+    """Owning device of each hash value (Alg. 2 ``Search``, vectorized).
+
+    The paper uses a linear search over split points (O(P) work per key);
+    ``searchsorted`` is the log(P) equivalent with identical output.
+    """
+    d = jnp.searchsorted(hash_splits, buckets.astype(jnp.int32), side="right") - 1
+    return jnp.clip(d, 0, hash_splits.shape[0] - 2).astype(jnp.int32)

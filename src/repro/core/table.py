@@ -1,0 +1,179 @@
+"""High-level mesh-facing API for the distributed HashGraph.
+
+Wraps the shard_map internals of ``repro.core.multi_hashgraph`` behind a
+simple object: callers hold *global* jax arrays (sharded over a mesh) and
+get back global arrays; all paper phases run inside one jitted shard_map.
+
+    table = DistributedHashTable(mesh, axis_names=("data", "model"), hash_range=1 << 20)
+    state = table.build(keys)            # keys: (N,) uint32, N % devices == 0
+    counts = table.query(state, queries) # multiplicity per query key
+    size = table.join_size(state, queries)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import hashing, multi_hashgraph
+from repro.core.hashgraph import HashGraph
+from repro.core.multi_hashgraph import DistributedHashGraph
+
+
+def _dhg_out_specs(axis_names: Sequence[str], hash_range: int, local_cap: int, seed: int):
+    ax = tuple(axis_names)
+    shard0 = P(ax)  # stack local shards along dim 0 in the global view
+    local = HashGraph(
+        offsets=shard0,
+        keys=shard0,
+        values=shard0,
+        table_size=local_cap,
+        seed=seed,
+        sorted_within_bucket=True,
+    )
+    return DistributedHashGraph(
+        local=local,
+        hash_splits=P(),  # identical on every device
+        num_dropped=P(),
+        hash_range=hash_range,
+        seed=seed,
+        local_range_cap=local_cap,
+        axis_names=ax,
+    )
+
+
+@dataclasses.dataclass(eq=False)  # identity hash — required for jit static self
+class DistributedHashTable:
+    """Factory for jitted build/query closures over a fixed mesh."""
+
+    mesh: jax.sharding.Mesh
+    axis_names: tuple
+    hash_range: int
+    seed: int = hashing.DEFAULT_SEED
+    capacity_slack: float = 1.25
+    range_slack: float = 1.5
+    num_bins: Optional[int] = None
+    paper_faithful_probe: bool = False
+    max_probe: int = 64
+
+    def __post_init__(self):
+        self.axis_names = tuple(self.axis_names)
+        self.num_devices = 1
+        for a in self.axis_names:
+            self.num_devices *= self.mesh.shape[a]
+        from repro.utils import cdiv
+
+        self.local_range_cap = int(
+            cdiv(self.hash_range, self.num_devices) * self.range_slack
+        )
+
+    # -- sharding helpers ----------------------------------------------------
+    def key_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P(self.axis_names))
+
+    def _in_spec(self):
+        return P(self.axis_names)
+
+    # -- build ----------------------------------------------------------------
+    @partial(jax.jit, static_argnums=0)
+    def build(self, keys: jax.Array, values: Optional[jax.Array] = None):
+        """Build the distributed table from a global (N,) uint32 key array."""
+        out_specs = _dhg_out_specs(
+            self.axis_names, self.hash_range, self.local_range_cap, self.seed
+        )
+
+        def body(k, v):
+            return multi_hashgraph.build_sharded(
+                k,
+                hash_range=self.hash_range,
+                axis_names=self.axis_names,
+                values=v,
+                num_bins=self.num_bins,
+                capacity_slack=self.capacity_slack,
+                range_slack=self.range_slack,
+                seed=self.seed,
+            )
+
+        if values is None:
+
+            def body1(k):
+                return body(k, None)
+
+            return shard_map(
+                body1,
+                mesh=self.mesh,
+                in_specs=(self._in_spec(),),
+                out_specs=out_specs,
+                check_vma=False,
+            )(keys)
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(self._in_spec(), self._in_spec()),
+            out_specs=out_specs,
+            check_vma=False,
+        )(keys, values)
+
+    # -- query ----------------------------------------------------------------
+    @partial(jax.jit, static_argnums=0)
+    def query(self, state: DistributedHashGraph, queries: jax.Array) -> jax.Array:
+        """Multiplicity of each global query key. Returns (Nq,) int32."""
+        in_specs = (
+            _dhg_out_specs(
+                self.axis_names, self.hash_range, self.local_range_cap, self.seed
+            ),
+            self._in_spec(),
+        )
+
+        def body(dhg, q):
+            return multi_hashgraph.query_sharded(
+                dhg,
+                q,
+                capacity_slack=self.capacity_slack,
+                paper_faithful_probe=self.paper_faithful_probe,
+                max_probe=self.max_probe,
+            )
+
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=in_specs,
+            out_specs=P(self.axis_names),
+            check_vma=False,
+        )(state, queries)
+
+    @partial(jax.jit, static_argnums=0)
+    def contains(self, state: DistributedHashGraph, queries: jax.Array) -> jax.Array:
+        return self.query(state, queries) > 0
+
+    @partial(jax.jit, static_argnums=0)
+    def join_size(self, state: DistributedHashGraph, queries: jax.Array) -> jax.Array:
+        """Global inner-join cardinality (scalar, replicated)."""
+        in_specs = (
+            _dhg_out_specs(
+                self.axis_names, self.hash_range, self.local_range_cap, self.seed
+            ),
+            self._in_spec(),
+        )
+
+        def body(dhg, q):
+            return multi_hashgraph.join_size_sharded(
+                dhg,
+                q,
+                capacity_slack=self.capacity_slack,
+                paper_faithful_probe=self.paper_faithful_probe,
+                max_probe=self.max_probe,
+            )
+
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=in_specs,
+            out_specs=P(),
+            check_vma=False,
+        )(state, queries)

@@ -1,0 +1,15 @@
+"""Data substrate: synthetic corpus, packing, HashGraph dedup, loader."""
+from repro.data.synthetic import SyntheticCorpus
+from repro.data.packing import pack_documents
+from repro.data.dedup import sequence_fingerprints, dedup_mask, dedup_mask_distributed
+from repro.data.loader import ShardedLoader, LoaderState
+
+__all__ = [
+    "SyntheticCorpus",
+    "pack_documents",
+    "sequence_fingerprints",
+    "dedup_mask",
+    "dedup_mask_distributed",
+    "ShardedLoader",
+    "LoaderState",
+]

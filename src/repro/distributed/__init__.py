@@ -1,0 +1,4 @@
+"""Distribution substrate: parallel config, sharding rules, fault tolerance."""
+from repro.distributed.parallel import ParallelConfig, single_device_parallel
+
+__all__ = ["ParallelConfig", "single_device_parallel"]

@@ -1,0 +1,103 @@
+"""Parallelism configuration threaded through model/train/serve builders.
+
+Axis roles on the production mesh (DESIGN.md §5):
+
+* ``dp_axes``  — data parallel + FSDP parameter sharding (``("pod","data")``
+  multi-pod, ``("data",)`` single-pod).
+* ``tp_axis``  — tensor parallel (heads / d_ff / vocab).
+* ``ep_axes``  — expert-parallel dispatch axes for MoE (defaults to
+  ``dp_axes``); the dispatch itself is the paper's binned capacity
+  all-to-all from ``repro.core.exchange``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    mesh: Optional[jax.sharding.Mesh]
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: Optional[str] = "model"
+    ep_axes: Optional[Tuple[str, ...]] = None  # None → dp_axes
+    moe_impl: str = "dense"  # dense | ep
+    # serve-time options
+    seq_shard_decode: bool = False  # shard KV cache over tp_axis on seq dim
+    # train-time options
+    microbatches: int = 1  # gradient accumulation steps
+    remat: bool = True
+    grad_compression: bool = False  # int8 + error feedback on dp all-reduce
+    seq_parallel: bool = False  # residual stream sequence-sharded over tp
+    act_barrier: bool = False  # optimization_barrier after block outputs:
+    # forces GSPMD to resolve partial sums in bf16 instead of sinking the
+    # all-reduce past the next rmsnorm's f32 upcast (2× wire bytes).
+
+    @property
+    def ep_axes_(self) -> Tuple[str, ...]:
+        return self.ep_axes if self.ep_axes is not None else self.dp_axes
+
+    @property
+    def dp_spec(self) -> P:
+        return P(self.dp_axes)
+
+    def batch_spec(self, extra_dims: int = 1) -> P:
+        """(B, ...) activations: batch over dp axes, rest replicated."""
+        return P(self.dp_axes, *([None] * extra_dims))
+
+    def num_devices(self, axes: Tuple[str, ...]) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def dp_size(self) -> int:
+        return self.num_devices(self.dp_axes)
+
+    def shard_act(self, x, *, batch_dim: int = 0, seq_dim: Optional[int] = 1):
+        """Pin activation sharding: batch over dp (+ seq over tp under SP).
+
+        GSPMD left alone can resolve sharding conflicts by replicating the
+        batch (measured: 16× activation all-reduces on the 16×16 mesh) —
+        every residual-stream tensor goes through this constraint.  No-op
+        off-mesh or when dims don't divide.
+        """
+        if self.mesh is None or getattr(x, "ndim", 0) < 2:
+            return x
+        from jax import lax
+        from jax.sharding import NamedSharding
+
+        spec: list = [None] * x.ndim
+        if self.dp_axes and x.shape[batch_dim] % max(self.dp_size, 1) == 0 and self.dp_size > 1:
+            spec[batch_dim] = self.dp_axes
+        if (
+            self.seq_parallel
+            and seq_dim is not None
+            and self.tp_axis
+            and x.shape[seq_dim] % max(self.tp_size, 1) == 0
+            and self.tp_size > 1
+        ):
+            spec[seq_dim] = self.tp_axis
+        if all(s is None for s in spec):
+            return x
+        x = lax.with_sharding_constraint(x, NamedSharding(self.mesh, P(*spec)))
+        if self.act_barrier:
+            x = lax.optimization_barrier(x)
+        return x
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+
+def single_device_parallel() -> ParallelConfig:
+    """Degenerate config for CPU smoke tests (no mesh, dense MoE)."""
+    return ParallelConfig(mesh=None, dp_axes=(), tp_axis=None, moe_impl="dense")

@@ -1,0 +1,229 @@
+"""Name-based sharding rules: param/optimizer/cache pytrees → PartitionSpecs.
+
+The framework uses GSPMD (``jax.jit`` + ``NamedSharding``) for the LM stack
+and reserves manual ``shard_map`` for the paper's exchange (hash table, MoE
+dispatch).  Rules here are *logical*: every leaf is classified by the last
+component of its tree path into Megatron-style roles, then physical axes are
+assigned only when the dimension divides the axis size (otherwise that dim
+falls back to replicated — keeps whisper-base's odd vocab safe).
+
+Roles (trailing-dim logic; scanned stacks carry a leading ``num_periods``
+dim which is never sharded):
+
+* **column-parallel** (out-features on ``tp``): wq/wk/wv, w_gate/w_up,
+  w_in, w_rec, w_if, w_a, w_x, lm_head.
+* **row-parallel** (in-features on ``tp``): wo, w_down, w_out.
+* **embed** (V, D): vocab on ``tp``, d_model on ``dp`` (FSDP).
+* everything else: FSDP only.
+
+FSDP assigns the ``dp`` axes to the largest still-unsharded dim.  Optimizer
+state inherits param specs (ZeRO-3).  KV caches shard batch on ``dp`` and
+heads on ``tp`` when the head count divides; otherwise the *sequence* dim
+goes on ``tp`` (sequence-sharded cache — required for kv_heads=1 archs).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.parallel import ParallelConfig
+
+# Last-path-component names → role.
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_rec", "w_if",
+    "w_a", "w_x", "lm_head",
+}
+_ROW_PARALLEL = {"wo", "w_down", "w_out"}
+_EMBED = {"embed"}
+_REPLICATED = {
+    "norm", "norm1", "norm2", "norm_x", "out_norm", "final_norm", "enc_norm",
+    "dec_norm", "q_norm", "k_norm", "b", "b_in", "b_out", "b_a", "b_x",
+    "conv_b", "lambda", "r", "conv_w", "pos_emb",
+}
+
+
+def _leaf_name(path: Tuple) -> str:
+    """Last string key in a jax tree path."""
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _axis_size(mesh_shape: dict, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh_shape.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= mesh_shape.get(a, 1)
+    return n
+
+
+def param_spec(
+    path: Tuple,
+    shape: Tuple[int, ...],
+    *,
+    dp_axes: Tuple[str, ...],
+    tp_axis: Optional[str],
+    mesh_shape: dict,
+    scanned: bool = False,
+) -> P:
+    """PartitionSpec for one parameter leaf."""
+    name = _leaf_name(path)
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    # dims eligible for sharding (skip the leading scan dim of layer stacks)
+    first = 1 if (scanned and ndim >= 2) else 0
+    tp_size = _axis_size(mesh_shape, tp_axis)
+    dp_size = _axis_size(mesh_shape, dp_axes)
+
+    def try_assign(dim: int, axes) -> bool:
+        size = _axis_size(mesh_shape, axes)
+        if spec[dim] is None and size > 1 and shape[dim] % size == 0:
+            spec[dim] = axes
+            return True
+        return False
+
+    if ndim - first >= 2 and name not in _REPLICATED:
+        if name in _EMBED:
+            # vocab over tp ONLY.  FSDP'ing d_model over `data` was measured
+            # to poison GSPMD propagation: the gather output carries
+            # feature-over-data sharding into the residual stream, GSPMD
+            # resolves the conflict by REPLICATING the batch over `data`
+            # and all-reducing f32 activations every layer (§Perf iter 1).
+            if tp_axis:
+                try_assign(first, tp_axis)
+        elif name in _COL_PARALLEL and tp_axis and tp_size > 1:
+            try_assign(ndim - 1, tp_axis)
+        elif name in _ROW_PARALLEL and tp_axis and tp_size > 1:
+            try_assign(ndim - 2, tp_axis)
+        # FSDP: dp axes on the largest remaining unsharded dim.
+        if dp_size > 1 and name not in _EMBED:
+            order = sorted(
+                range(first, ndim), key=lambda d: shape[d], reverse=True
+            )
+            for d in order:
+                if try_assign(d, dp_axes):
+                    break
+    return P(*spec)
+
+
+def _is_scanned_layer(path: Tuple) -> bool:
+    return any(
+        hasattr(e, "key") and str(e.key) == "layers" for e in path
+    ) or any(
+        hasattr(e, "key") and str(e.key) in ("enc_layers", "dec_layers")
+        for e in path
+    )
+
+
+def param_pspecs(params_shapes: Any, parallel: ParallelConfig):
+    """Pytree of PartitionSpec matching a params (shape) pytree."""
+    mesh_shape = dict(parallel.mesh.shape) if parallel.mesh is not None else {}
+
+    def f(path, leaf):
+        return param_spec(
+            path,
+            tuple(leaf.shape),
+            dp_axes=parallel.dp_axes,
+            tp_axis=parallel.tp_axis,
+            mesh_shape=mesh_shape,
+            scanned=_is_scanned_layer(path),
+        )
+
+    return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+
+def cache_pspecs(cache_shapes: Any, parallel: ParallelConfig):
+    """PartitionSpecs for a decode-cache pytree.
+
+    Cache leaves are scanned stacks ``(num_periods, B, ...)``:
+
+    * KV caches ``(P, B, KV, S, hd)``: B on dp; KV on tp when divisible,
+      else S on tp (sequence-sharded decode — kv_heads < tp_size).
+    * recurrent states ``(P, B, D...)``: B on dp; widest trailing dim on tp.
+    """
+    mesh_shape = dict(parallel.mesh.shape) if parallel.mesh is not None else {}
+    dp_axes, tp_axis = parallel.dp_axes, parallel.tp_axis
+    dp_size = _axis_size(mesh_shape, dp_axes)
+    tp_size = _axis_size(mesh_shape, tp_axis)
+
+    def f(path, leaf):
+        shape = tuple(leaf.shape)
+        ndim = len(shape)
+        if ndim < 2:
+            return P()
+        spec: list = [None] * ndim
+        if dp_size > 1 and shape[1] % dp_size == 0:
+            spec[1] = dp_axes  # batch
+        if tp_axis and tp_size > 1 and ndim >= 3:
+            # prefer heads (dim 2 of 5-dim KV), else sequence, else widest.
+            cands = []
+            if ndim == 5:
+                cands = [2, 3]  # (P, B, KV, S, hd): heads, then seq
+            else:
+                cands = sorted(
+                    range(2, ndim), key=lambda d: shape[d], reverse=True
+                )
+            for d in cands:
+                if spec[d] is None and shape[d] % tp_size == 0 and shape[d] >= tp_size:
+                    spec[d] = tp_axis
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def batch_pspec(shape_len: int, parallel: ParallelConfig) -> P:
+    """(B, ...) input batch: batch dim over dp axes."""
+    if parallel.mesh is None or not parallel.dp_axes:
+        return P()
+    return P(parallel.dp_axes, *([None] * (shape_len - 1)))
+
+
+def to_named(mesh: Mesh, specs: Any):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def spec_summary(params_shapes: Any, specs: Any, max_rows: int = 0) -> str:
+    """Human-readable table of leaf → shape → spec (debugging/DESIGN docs)."""
+    rows = []
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(params_shapes)
+    flat_p = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    for (path, leaf), spec in zip(flat_s, flat_p):
+        name = jax.tree_util.keystr(path)
+        rows.append(f"{name:70s} {str(tuple(leaf.shape)):28s} {spec}")
+    if max_rows:
+        rows = rows[:max_rows]
+    return "\n".join(rows)
+
+
+def shard_bytes_per_device(shapes: Any, specs: Any, mesh_shape: dict) -> int:
+    """Static per-device byte estimate of a sharded pytree."""
+    total = 0
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    flat_p = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    for (_, leaf), spec in zip(flat_s, flat_p):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        denom = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            denom *= _axis_size(mesh_shape, entry)
+        total += -(-n // denom) * np.dtype(leaf.dtype).itemsize
+    return total

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each subpackage follows ``<name>.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (jit'd public wrapper, auto-interpret on CPU) and
+``ref.py`` (pure-jnp oracle used by the allclose tests).
+
+Kernels:
+
+* ``murmur``          — fused MurmurHash3 + bucket/bin id (Alg. 1 l.2, Alg. 2 l.4-8).
+* ``histogram``       — blocked compare-tile bin histogram (Phase 1 counters).
+* ``bucket_probe``    — the paper's linear bucket scan for queries (§3.3).
+* ``flash_attention`` — blockwise online-softmax attention for the LM stack
+  (the framework's compute hot-spot; TPU target, validated in interpret mode).
+"""
+
+from repro.kernels.common import use_interpret_mode
+
+__all__ = ["use_interpret_mode"]

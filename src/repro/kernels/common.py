@@ -1,0 +1,31 @@
+"""Shared kernel helpers: interpret-mode selection and padding utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import cdiv
+
+
+def use_interpret_mode() -> bool:
+    """Pallas TPU kernels run in interpret mode on non-TPU backends.
+
+    This container is CPU-only: TPU is the *target*, interpret mode is the
+    validation vehicle (assignment contract).  On a real TPU this returns
+    False and the kernels lower natively.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def pad_to_block_1d(x: jax.Array, block: int, fill) -> tuple[jax.Array, int]:
+    """Pad a 1-D array up to a multiple of ``block``; returns (padded, n_orig)."""
+    n = x.shape[0]
+    padded = cdiv(n, block) * block
+    if padded != n:
+        x = jnp.pad(x, (0, padded - n), constant_values=fill)
+    return x, n
+
+
+def as_lanes(x: jax.Array, lanes: int = 128) -> jax.Array:
+    """Reshape a block-padded 1-D array to (rows, lanes) — TPU VPU layout."""
+    return x.reshape(-1, lanes)

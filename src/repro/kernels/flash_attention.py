@@ -1,0 +1,198 @@
+"""Blockwise online-softmax (flash) attention Pallas kernel.
+
+The LM architectures' compute hot-spot.  Classic TPU tiling: grid is
+``(heads, q_blocks, kv_blocks)`` with the kv axis innermost; VMEM scratch
+holds the running max ``m``, normalizer ``l`` and the unnormalized
+accumulator.  The MXU does the two GEMMs per step (``q·kᵀ`` and ``p·v``);
+masking (causal and/or sliding-window) is applied in-register; fully-masked
+kv blocks are predicated off with ``pl.when`` so causal attention does half
+the FLOPs (and sliding-window does ``O(S·w)``).
+
+GQA is handled in the BlockSpec index maps — query head ``h`` reads kv head
+``h // group`` — so kv tiles are fetched once per group, not replicated.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.utils import cdiv
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int,
+    block_kv: int,
+    num_kv_blocks: int,
+    seq_q: int,
+    seq_kv: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    kv_start = ik * block_kv
+    # Static-shape predication: a kv block is live unless causality or the
+    # sliding window excludes it entirely.  Decode aligns the query block to
+    # the suffix of the kv axis (offset = seq_kv - seq_q).
+    offset = seq_kv - seq_q if causal else 0
+    if causal:
+        k_max = q_start + block_q - 1 + offset
+    elif window is not None:
+        k_max = q_start + block_q - 1 + window - 1
+    else:
+        k_max = seq_kv - 1
+    if window is not None:
+        k_min = q_start + offset - window + 1
+    else:
+        k_min = 0
+    live = (kv_start <= k_max) & (kv_start + block_kv - 1 >= k_min)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)  # (block_kv, d)
+        v = v_ref[0].astype(jnp.float32)  # (block_kv, d)
+        # Rows past seq_kv are block padding (undefined memory). Their score
+        # columns are masked below, but 0 * garbage(NaN) in p·v still poisons
+        # the accumulator — zero the padded value rows explicitly.
+        col_valid = kv_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_kv, 1), 0
+        ) < seq_kv
+        v = jnp.where(col_valid, v, 0.0)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (block_q, block_kv)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        k_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = k_pos < seq_kv
+        if causal:
+            # decode offset: query row i sits at absolute position
+            # seq_kv - seq_q + i (aligned suffix), standard causal otherwise.
+            offset = seq_kv - seq_q
+            mask &= k_pos <= q_pos + offset
+            if window is not None:
+                mask &= k_pos > q_pos + offset - window
+        elif window is not None:
+            mask &= jnp.abs(k_pos - q_pos) < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]  # (block_q, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        # Rows where every key is masked: exp(-inf - -inf) garbage — zero them.
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_attention_fhsd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    q_heads_per_kv: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    """Attention over flattened-head layout.
+
+    ``q``: (Hq, Sq, D), ``k``/``v``: (Hkv, Skv, D) with
+    ``Hq == Hkv * q_heads_per_kv``.  Returns (Hq, Sq, D) in q's dtype.
+    """
+    hq, sq, d = q.shape
+    hkv, skv, dk = k.shape
+    if dk != d or v.shape != k.shape:
+        raise ValueError("k/v shape mismatch")
+    if hq != hkv * q_heads_per_kv:
+        raise ValueError(f"GQA mismatch: {hq} != {hkv} * {q_heads_per_kv}")
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    nq = cdiv(sq, block_q)
+    nkv = cdiv(skv, block_kv)
+    grid = (hq, nq, nkv)
+    group = q_heads_per_kv
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_kv=block_kv,
+        num_kv_blocks=nkv,
+        seq_q=sq,
+        seq_kv=skv,
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((hq, sq, d), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, block_q, d), lambda h, i, j: (h, i, 0), memory_space=pltpu.VMEM
+            ),
+            pl.BlockSpec(
+                (1, block_kv, d),
+                lambda h, i, j: (h // group, j, 0),
+                memory_space=pltpu.VMEM,
+            ),
+            pl.BlockSpec(
+                (1, block_kv, d),
+                lambda h, i, j: (h // group, j, 0),
+                memory_space=pltpu.VMEM,
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, d), lambda h, i, j: (h, i, 0), memory_space=pltpu.VMEM
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

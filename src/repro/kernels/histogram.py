@@ -1,0 +1,76 @@
+"""Blocked compare-tile histogram Pallas kernel (Alg. 2 Phase 1 counters).
+
+The CUDA build scatter-increments ``BinCounter`` with ``AtomicAdd``.  TPUs
+have no global atomics and scatters serialize, so the TPU-native histogram
+is a *dense compare*: for a VMEM tile of bin ids and a 128-aligned tile of
+candidate bins, accumulate ``sum(bin_id == bin)`` on the VPU.
+
+Grid is ``(num_bin_tiles, num_key_blocks)`` — key blocks innermost so each
+output tile accumulates across all key blocks while resident in VMEM
+(revision-friendly: the output block's index_map ignores the key-block
+index, making this the canonical Pallas accumulation pattern).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.utils import cdiv
+
+
+def _kernel(bins_ref, out_ref, *, bin_tile: int):
+    j = pl.program_id(0)  # bin tile
+    i = pl.program_id(1)  # key block
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    blk = bins_ref[...].astype(jnp.int32)  # (block_rows, 128)
+    base = j * bin_tile
+    tile = base + jax.lax.broadcasted_iota(jnp.int32, (1, bin_tile), 1)
+    # (block_rows, 128, bin_tile) compare, reduced on the VPU.
+    hits = (blk[:, :, None] == tile[None, :, :]).astype(jnp.int32)
+    out_ref[...] += jnp.sum(hits, axis=(0, 1), keepdims=False)[None, :]
+
+
+def histogram_2d(
+    bins2d: jax.Array,
+    num_bins: int,
+    *,
+    block_rows: int = 8,
+    bin_tile: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Histogram of int32 bin ids in ``[0, num_bins)``; ids < 0 are ignored
+    (padding).  ``bins2d`` is ``(rows, 128)``; returns ``(num_bins,)`` int32.
+
+    ``num_bins`` must be a multiple of ``bin_tile``.
+    """
+    rows, lanes = bins2d.shape
+    if lanes != 128:
+        raise ValueError(f"lane dim must be 128, got {lanes}")
+    if num_bins % bin_tile != 0:
+        raise ValueError(f"num_bins {num_bins} must be a multiple of bin_tile {bin_tile}")
+    num_bin_tiles = num_bins // bin_tile
+    grid = (num_bin_tiles, cdiv(rows, block_rows))
+    out = pl.pallas_call(
+        partial(_kernel, bin_tile=bin_tile),
+        out_shape=jax.ShapeDtypeStruct((num_bin_tiles, bin_tile), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (block_rows, lanes), lambda j, i: (i, 0), memory_space=pltpu.VMEM
+            )
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bin_tile), lambda j, i: (j, 0), memory_space=pltpu.VMEM
+        ),
+        interpret=interpret,
+        name="bin_histogram",
+    )(bins2d)
+    return out.reshape(num_bins)

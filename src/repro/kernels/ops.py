@@ -1,0 +1,189 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper handles padding/reshaping to the TPU ``(rows, 128)`` lane
+layout and chooses interpret mode automatically off-TPU (this container is
+CPU-only; TPU is the lowering target, interpret mode the validator).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.kernels import bucket_probe as _probe
+from repro.kernels import common
+from repro.kernels import flash_attention as _flash
+from repro.kernels import histogram as _hist
+from repro.kernels import murmur as _murmur
+from repro.utils import cdiv
+
+LANES = 128
+
+
+def _auto(interpret: Optional[bool]) -> bool:
+    return common.use_interpret_mode() if interpret is None else interpret
+
+
+@partial(jax.jit, static_argnames=("table_size", "seed", "block_rows", "interpret"))
+def hash_to_buckets(
+    keys: jax.Array,
+    table_size: int,
+    seed: int = hashing.DEFAULT_SEED,
+    *,
+    block_rows: int = 64,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused murmur3+mod of a flat (N,) uint32 key array → (N,) int32."""
+    n = keys.shape[0]
+    padded, _ = common.pad_to_block_1d(keys.astype(jnp.uint32), LANES * block_rows, 0)
+    out = _murmur.murmur_bucket_2d(
+        common.as_lanes(padded, LANES),
+        table_size,
+        seed,
+        block_rows=block_rows,
+        interpret=_auto(interpret),
+    )
+    return out.reshape(-1)[:n]
+
+
+@partial(
+    jax.jit, static_argnames=("num_bins", "block_rows", "bin_tile", "interpret")
+)
+def bin_histogram(
+    bins: jax.Array,
+    num_bins: int,
+    *,
+    block_rows: int = 8,
+    bin_tile: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Histogram of (N,) int32 bin ids → (num_bins,) int32.
+
+    ``num_bins`` is padded up to a multiple of ``bin_tile`` internally.
+    """
+    padded_bins = cdiv(num_bins, bin_tile) * bin_tile
+    x, _ = common.pad_to_block_1d(bins.astype(jnp.int32), LANES * block_rows, -1)
+    out = _hist.histogram_2d(
+        common.as_lanes(x, LANES),
+        padded_bins,
+        block_rows=block_rows,
+        bin_tile=bin_tile,
+        interpret=_auto(interpret),
+    )
+    return out[:num_bins]
+
+
+@partial(jax.jit, static_argnames=("max_probe", "block_rows", "interpret"))
+def bucket_probe(
+    table_keys: jax.Array,
+    starts: jax.Array,
+    ends: jax.Array,
+    queries: jax.Array,
+    *,
+    max_probe: int = 64,
+    block_rows: int = 8,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Per-query match count by linear bucket scan (paper's query loop)."""
+    nq = queries.shape[0]
+    blk = LANES * block_rows
+    s, _ = common.pad_to_block_1d(starts.astype(jnp.int32), blk, 0)
+    e, _ = common.pad_to_block_1d(ends.astype(jnp.int32), blk, 0)  # empty window
+    q, _ = common.pad_to_block_1d(queries.astype(jnp.uint32), blk, 0)
+    t, _ = common.pad_to_block_1d(table_keys.astype(jnp.uint32), LANES, 0)
+    out = _probe.bucket_probe_2d(
+        common.as_lanes(s, LANES),
+        common.as_lanes(e, LANES),
+        common.as_lanes(q, LANES),
+        common.as_lanes(t, LANES),
+        max_probe=max_probe,
+        block_rows=block_rows,
+        interpret=_auto(interpret),
+    )
+    return out.reshape(-1)[:nq]
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "scale",
+        "block_q",
+        "block_kv",
+        "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash attention over (B, Hq, S, D) with GQA kv (B, Hkv, Skv, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+    out = _flash.flash_attention_fhsd(
+        qf,
+        kf,
+        vf,
+        causal=causal,
+        window=window,
+        scale=scale,
+        block_q=block_q,
+        block_kv=block_kv,
+        q_heads_per_kv=group,
+        interpret=_auto(interpret),
+    )
+    return out.reshape(b, hq, sq, d)
+
+
+@partial(jax.jit, static_argnames=("t_block", "interpret"))
+def slstm_recurrence(
+    pre: jax.Array,
+    r: jax.Array,
+    c0: jax.Array,
+    n0: jax.Array,
+    h0: jax.Array,
+    m0: jax.Array,
+    *,
+    t_block: int = 256,
+    interpret: Optional[bool] = None,
+):
+    """sLSTM recurrence with VMEM-pinned recurrent weights.
+
+    pre (B,H,S,4,hd) f32, r (H,4,hd,hd) f32, state (B,H,hd) f32 each.
+    S is padded to a multiple of ``t_block`` internally.
+    """
+    from repro.kernels import slstm as _slstm
+
+    b, h, s, four, hd = pre.shape
+    tb = min(t_block, s)
+    pad = (-s) % tb
+    if pad:
+        pre = jnp.pad(pre, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    hs, finals = _slstm.slstm_sequence(
+        pre.astype(jnp.float32),
+        r.astype(jnp.float32),
+        c0.astype(jnp.float32),
+        n0.astype(jnp.float32),
+        h0.astype(jnp.float32),
+        m0.astype(jnp.float32),
+        t_block=tb,
+        seq_len=s,
+        interpret=_auto(interpret),
+    )
+    return hs[:, :, :s], finals

@@ -1,0 +1,479 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST set the fake-device flag before any other import (jax locks the
+device count on first init):
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# isort: split
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, SHAPE_SUITE, get_config, shape_cell
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh, production_parallel
+from repro.models.api import build_model
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.step import TrainStepConfig, make_train_step
+from repro.utils import human_bytes, tree_param_count
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e, per assignment)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / ICI link
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+def _with_sharding(sds_tree: Any, spec_tree: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        sds_tree,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _batch_shardings(specs: dict, parallel, batch: int) -> dict:
+    """NamedSharding per input leaf: batch over dp when divisible."""
+    mesh = parallel.mesh
+    dp = parallel.dp_axes
+    dp_size = parallel.dp_size
+    out = {}
+    for k, s in specs.items():
+        if batch % max(dp_size, 1) == 0 and dp:
+            spec = P(dp, *([None] * (len(s.shape) - 1)))
+        else:
+            spec = P(*([None] * len(s.shape)))
+        out[k] = jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, spec))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[dims] token in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [groups, group_size]
+    return default
+
+
+def parse_collectives(hlo: str, num_devices: int) -> dict:
+    """Per-device wire bytes by collective kind, from post-SPMD HLO.
+
+    Shapes in the partitioned module are already per-device.  Wire-byte
+    model per op (g = replica-group size):
+      all-gather           out × (g-1)/g
+      reduce-scatter       out × (g-1)          (input = out × g)
+      all-reduce           out × 2(g-1)/g
+      all-to-all           out × (g-1)/g
+      collective-permute   out
+    """
+    per_kind: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        ls = line.lstrip()
+        if "=" not in ls:
+            continue
+        head, _, rest = ls.partition("=")
+        # match "<shape> kind(" right after '='
+        kind = None
+        for k in _COLLECTIVES:
+            if f" {k}(" in rest or f" {k}-start(" in rest:
+                kind = k
+                break
+        if kind is None:
+            continue
+        out_bytes = _shape_bytes(rest.split("(", 1)[0])
+        g = _group_size(line, num_devices)
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            wire = out_bytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = out_bytes * (g - 1)
+        elif kind == "all-reduce":
+            wire = out_bytes * 2 * (g - 1) / g
+        elif kind == "all-to-all":
+            wire = out_bytes * (g - 1) / g
+        else:  # collective-permute
+            wire = out_bytes
+        per_kind[kind] += wire
+        counts[kind] += 1
+    per_kind_total = sum(per_kind.values())
+    return {"bytes_by_kind": per_kind, "counts": counts, "wire_bytes": per_kind_total}
+
+
+# ---------------------------------------------------------------------------
+# model-flops convention
+# ---------------------------------------------------------------------------
+def model_flops(cfg, params_shapes, cell) -> float:
+    """6·N·D (train) / 2·N·D (inference), N = active params."""
+    n_total = tree_param_count(params_shapes)
+    n_active = n_total
+    if cfg.is_moe:
+        # expert weights count k/E; find them by shape: leading dim == E.
+        flat, _ = jax.tree_util.tree_flatten_with_path(params_shapes)
+        n_exp = sum(
+            int(np.prod(l.shape))
+            for p, l in flat
+            if len(l.shape) >= 3 and l.shape[-3] == cfg.num_experts
+            and "moe" in jax.tree_util.keystr(p)
+        )
+        n_active = n_total - n_exp + n_exp * cfg.experts_per_token / cfg.num_experts
+    if cell.kind == "train":
+        d = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * d
+    if cell.kind == "prefill":
+        d = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * d
+    d = cell.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * d
+
+
+# ---------------------------------------------------------------------------
+# the dry run
+# ---------------------------------------------------------------------------
+def _cost_dict(compiled) -> dict:
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return dict(c or {})
+
+
+def _memory_dict(compiled) -> dict:
+    m = compiled.memory_analysis()
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(m, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def dryrun_cell(
+    arch: str,
+    cell_name: str,
+    multi_pod: bool,
+    *,
+    microbatches: int = 8,
+    moe_impl: str = "ep",
+    save_hlo: Optional[str] = None,
+    seq_shard_decode: bool = False,
+    seq_parallel: bool = True,
+    act_barrier: bool = False,
+) -> dict:
+    cfg = get_config(arch)
+    cell = shape_cell(cell_name)
+    ok, why = cfg.supports_cell(cell)
+    if not ok:
+        return {"arch": arch, "cell": cell_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    # decode lowers a single token step — no microbatching there.
+    k = microbatches if cell.kind == "train" else 1
+    if cell.kind == "train" and cell.global_batch % (
+        k * max(1, int(np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names])))
+    ):
+        k = 1
+    parallel = production_parallel(
+        mesh, moe_impl=moe_impl, microbatches=k,
+        seq_parallel=seq_parallel, act_barrier=act_barrier,
+    )
+    if seq_shard_decode:
+        import dataclasses as _dc
+        parallel = _dc.replace(parallel, seq_shard_decode=True)
+    bundle = build_model(cfg, parallel)
+
+    pshapes = bundle.param_shapes()
+    pspecs = shd.param_pspecs(pshapes, parallel)
+    params_in = _with_sharding(pshapes, pspecs, mesh)
+
+    t0 = time.time()
+    if cell.kind == "train":
+        tcfg = TrainStepConfig()
+        opt_shapes = jax.eval_shape(lambda p: adamw_init(p, tcfg.adamw), pshapes)
+        opt_specs = {
+            "step": P(),
+            "m": pspecs,
+            "v": pspecs,
+        }
+        opt_in = _with_sharding(opt_shapes, opt_specs, mesh)
+        batch_in = _batch_shardings(
+            bundle.train_input_specs(cell), parallel, cell.global_batch
+        )
+        step_fn = make_train_step(bundle, tcfg)
+        jitted = jax.jit(
+            step_fn,
+            out_shardings=(
+                jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                             is_leaf=lambda x: isinstance(x, P)),
+                jax.tree.map(lambda p: NamedSharding(mesh, p), opt_specs,
+                             is_leaf=lambda x: isinstance(x, P)),
+                None,
+            ),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_in, opt_in, batch_in)
+    elif cell.kind == "prefill":
+        batch_in = _batch_shardings(
+            bundle.prefill_input_specs(cell), parallel, cell.global_batch
+        )
+
+        from repro.serve.engine import serving_compute_copy
+
+        def prefill_fn(params, batch):
+            return bundle.prefill(
+                serving_compute_copy(params), batch, cache_len=cell.seq_len
+            )
+
+        cache_shapes = jax.eval_shape(
+            lambda: bundle.init_cache(cell.global_batch, cell.seq_len)
+        )
+        cspecs = shd.cache_pspecs(cache_shapes, parallel)
+        jitted = jax.jit(
+            prefill_fn,
+            out_shardings=(
+                None,
+                jax.tree.map(lambda p: NamedSharding(mesh, p), cspecs,
+                             is_leaf=lambda x: isinstance(x, P)),
+            ),
+        )
+        lowered = jitted.lower(params_in, batch_in)
+    else:  # decode
+        b = cell.global_batch
+        specs = bundle.decode_input_specs(cell)
+        cache_shapes = specs["caches"]
+        cspecs = shd.cache_pspecs(cache_shapes, parallel)
+        caches_in = _with_sharding(cache_shapes, cspecs, mesh)
+        dp_ok = b % max(parallel.dp_size, 1) == 0
+        tok_spec = P(parallel.dp_axes, None) if dp_ok else P(None, None)
+        pos_spec = P(parallel.dp_axes) if dp_ok else P(None)
+        token_in = jax.ShapeDtypeStruct(
+            (b, 1), jnp.int32, sharding=NamedSharding(mesh, tok_spec)
+        )
+        pos_in = jax.ShapeDtypeStruct(
+            (b,), jnp.int32, sharding=NamedSharding(mesh, pos_spec)
+        )
+
+        from repro.serve.engine import serving_compute_copy
+
+        def serve_step(params, caches, token, pos):
+            return bundle.decode_step(
+                serving_compute_copy(params), caches, token, pos
+            )
+
+        jitted = jax.jit(
+            serve_step,
+            out_shardings=(
+                None,
+                jax.tree.map(lambda p: NamedSharding(mesh, p), cspecs,
+                             is_leaf=lambda x: isinstance(x, P)),
+            ),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_in, caches_in, token_in, pos_in)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = _cost_dict(compiled)
+    memd = _memory_dict(compiled)
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, chips)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    # Trip-count-aware re-analysis: XLA's cost_analysis counts while bodies
+    # once (a scanned train step under-reports ~layers×microbatches).
+    from repro.analysis import hlo_cost
+
+    # flash-kernel accounting only for attention-family blocks (mLSTM's
+    # quadratic gates are fixed algorithmically by chunking, not modeled).
+    attn_family = any(
+        bt in ("attn", "swa", "local") for bt in cfg.block_pattern
+    ) or cfg.is_encoder_decoder
+    summ = hlo_cost.analyze(
+        hlo, chips,
+        fused_attention_shapes=attn_family,
+        # recurrence weights pinned in VMEM across the time loop — the
+        # contract of kernels/slstm.py (validated vs the scan oracle).
+        pin_loop_invariants=True,
+    )
+    flops = summ.flops
+    bytes_accessed = summ.hbm_bytes
+    mf = model_flops(cfg, pshapes, cell)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": summ.wire_bytes / LINK_BW,
+    }
+    bottleneck = max(terms, key=lambda kk: terms[kk])
+    rec = {
+        "arch": arch,
+        "cell": cell_name,
+        "multi_pod": multi_pod,
+        "chips": chips,
+        "status": "ok",
+        "microbatches": k,
+        "moe_impl": moe_impl,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "wire_bytes_per_device": summ.wire_bytes,
+        "wire_by_kind": summ.wire_by_kind,
+        "collective_op_counts": summ.collective_counts,
+        "unknown_trip_loops": summ.unknown_trip_loops,
+        "xla_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collectives_lineparse": coll,
+        "memory_analysis": memd,
+        "terms_s": terms,
+        "bottleneck": bottleneck,
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / max(flops * chips, 1.0),
+        "params_total": tree_param_count(pshapes),
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS) + ["all"])
+    ap.add_argument("--cell", default="all",
+                    choices=[c.name for c in SHAPE_SUITE] + ["all"])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--moe-impl", default="ep", choices=["ep", "dense"])
+    ap.add_argument("--seq-shard-decode", action="store_true")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--act-barrier", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", default=None, help="dir to dump optimized HLO text")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    cells = [c.name for c in SHAPE_SUITE] if args.cell == "all" else [args.cell]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.save_hlo:
+        os.makedirs(args.save_hlo, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for cell in cells:
+            for mp in meshes:
+                tag = f"{arch}.{cell}.{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] {tag}: cached")
+                    continue
+                hlo_path = (
+                    os.path.join(args.save_hlo, tag + ".hlo.txt")
+                    if args.save_hlo
+                    else None
+                )
+                try:
+                    rec = dryrun_cell(
+                        arch, cell, mp,
+                        microbatches=args.microbatches,
+                        moe_impl=args.moe_impl,
+                        save_hlo=hlo_path,
+                        seq_shard_decode=args.seq_shard_decode,
+                        seq_parallel=not args.no_seq_parallel,
+                        act_barrier=args.act_barrier,
+                    )
+                except Exception as e:  # record and continue the sweep
+                    failures += 1
+                    rec = {
+                        "arch": arch, "cell": cell, "multi_pod": mp,
+                        "status": "error", "error": repr(e),
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    t = rec["terms_s"]
+                    print(
+                        f"[dryrun] {tag}: OK lower={rec['lower_s']}s "
+                        f"compile={rec['compile_s']}s "
+                        f"compute={t['compute_s']:.3e}s memory={t['memory_s']:.3e}s "
+                        f"collective={t['collective_s']:.3e}s "
+                        f"bottleneck={rec['bottleneck']} "
+                        f"temp={human_bytes(rec['memory_analysis'].get('temp_size_in_bytes', 0))}"
+                    )
+                elif rec["status"] == "skipped":
+                    print(f"[dryrun] {tag}: SKIPPED ({rec['reason'][:90]})")
+                else:
+                    print(f"[dryrun] {tag}: ERROR {rec['error'][:200]}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

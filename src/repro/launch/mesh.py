@@ -1,0 +1,68 @@
+"""Production mesh construction (single-pod 16×16, multi-pod 2×16×16).
+
+``make_production_mesh`` is a *function* so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and everything else (smoke tests, benches) sees the default single
+CPU device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.distributed.parallel import ParallelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """TPU v5e production mesh: one pod = 16×16 = 256 chips.
+
+    single-pod: ``("data", "model") = (16, 16)``
+    multi-pod:  ``("pod", "data", "model") = (2, 16, 16)`` — the ``pod``
+    axis composes with ``data`` for DP/FSDP by default (DCN-friendly:
+    only gradient/weight collectives cross pods).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(devices: Optional[int] = None) -> jax.sharding.Mesh:
+    """Small mesh over however many (fake) devices the process has."""
+    n = devices or len(jax.devices())
+    if n >= 4:
+        return jax.make_mesh((n // 2, 2), ("data", "model"))
+    return jax.make_mesh((n,), ("data",))
+
+
+def production_parallel(
+    mesh: jax.sharding.Mesh,
+    *,
+    moe_impl: str = "ep",
+    microbatches: int = 8,
+    grad_compression: bool = False,
+    seq_parallel: bool = True,
+    act_barrier: bool = False,
+) -> ParallelConfig:
+    """ParallelConfig wired for the production mesh axes.
+
+    ``seq_parallel`` defaults on: residual-stream tensors are sequence-
+    sharded over ``model``, turning the per-layer Megatron activation
+    all-reduces into reduce-scatter/all-gather pairs (2× fewer wire bytes
+    — §Perf iter 3) and cutting activation HBM residency tp-fold.
+    """
+    names = mesh.axis_names
+    dp_axes: Tuple[str, ...] = tuple(a for a in names if a in ("pod", "data"))
+    tp_axis = "model" if "model" in names else None
+    return ParallelConfig(
+        mesh=mesh,
+        dp_axes=dp_axes,
+        tp_axis=tp_axis,
+        moe_impl=moe_impl,
+        microbatches=microbatches,
+        remat=True,
+        grad_compression=grad_compression,
+        seq_parallel=seq_parallel,
+        act_barrier=act_barrier,
+    )

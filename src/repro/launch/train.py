@@ -1,0 +1,132 @@
+"""End-to-end training driver.
+
+Examples::
+
+    # ~100M-param qwen3-family model, 200 steps on CPU
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_4b --smoke \
+        --steps 200 --batch 8 --seq 256 --d-model 256 --layers 8
+
+    # data-parallel over 8 fake devices with int8 grad compression + dedup
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_4b --smoke \
+        --fake-devices 8 --grad-compression --dedup local --steps 50
+
+Device count is locked at first jax import, so ``--fake-devices`` is
+handled *before* importing jax.
+"""
+import argparse
+import os
+import sys
+
+
+def _parse():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=0, help="override width (smoke)")
+    ap.add_argument("--layers", type=int, default=0, help="override depth (smoke)")
+    ap.add_argument("--vocab", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--dedup", default=None, choices=[None, "local"])
+    ap.add_argument("--fake-devices", type=int, default=0)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--crash-at-step", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args()
+
+
+def main() -> None:
+    args = _parse()
+    if args.fake_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.fake_devices}"
+        )
+    import dataclasses
+
+    import jax
+
+    from repro.configs.base import get_config, get_smoke_config
+    from repro.data import ShardedLoader, SyntheticCorpus
+    from repro.distributed.parallel import ParallelConfig, single_device_parallel
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models.api import build_model
+    from repro.train import Trainer, TrainerConfig, TrainStepConfig
+    from repro.utils import tree_param_count
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    overrides = {}
+    if args.d_model:
+        overrides["d_model"] = args.d_model
+    if args.layers:
+        overrides["num_layers"] = args.layers
+    if args.vocab:
+        overrides["vocab_size"] = args.vocab
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    if args.fake_devices and len(jax.devices()) > 1:
+        mesh = make_smoke_mesh()
+        dp = ("data",)
+        tp = "model" if "model" in mesh.axis_names else None
+        parallel = ParallelConfig(
+            mesh=mesh,
+            dp_axes=dp,
+            tp_axis=tp,
+            moe_impl="ep" if cfg.is_moe else "dense",
+            microbatches=args.microbatches,
+            grad_compression=args.grad_compression,
+        )
+    else:
+        parallel = dataclasses.replace(
+            single_device_parallel(),
+            microbatches=args.microbatches,
+            grad_compression=args.grad_compression,
+        )
+
+    bundle = build_model(cfg, parallel)
+    n = tree_param_count(bundle.param_shapes())
+    print(f"[train] arch={cfg.name} params={n/1e6:.1f}M devices={len(jax.devices())}")
+
+    corpus = SyntheticCorpus(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, seed=args.seed, dup_rate=0.05
+    )
+    loader = ShardedLoader(
+        corpus,
+        batch_size=args.batch,
+        mesh=parallel.mesh,
+        dp_axes=parallel.dp_axes or ("data",),
+        dedup=args.dedup,
+    )
+    tcfg = TrainStepConfig(
+        peak_lr=args.lr, warmup_steps=max(10, args.steps // 10), total_steps=args.steps
+    )
+    trainer = Trainer(
+        bundle,
+        loader,
+        tcfg,
+        TrainerConfig(
+            total_steps=args.steps,
+            checkpoint_every=args.checkpoint_every if args.checkpoint_dir else 0,
+            checkpoint_dir=args.checkpoint_dir,
+            log_every=max(1, args.steps // 20),
+            seed=args.seed,
+            crash_at_step=args.crash_at_step,
+        ),
+    )
+    out = trainer.run()
+    hist = out["history"]
+    if hist:
+        print(
+            f"[train] done: step={out['final_step']} "
+            f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+            f"stragglers={out['stragglers']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

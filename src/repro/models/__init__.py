@@ -1,0 +1,12 @@
+"""Model zoo: composable JAX blocks for the assigned architectures.
+
+Decoder-only transformers (dense GQA, MoE, sliding-window), xLSTM blocks,
+RG-LRU/Griffin hybrid blocks, encoder-decoder (whisper), and VLM prefix
+models (pixtral).  Everything is pure-functional: ``build_model(cfg)``
+returns init/loss/prefill/decode closures over parameter pytrees, with
+``lax.scan`` over stacked layer parameters so the HLO stays compact at 126
+layers.
+"""
+from repro.models.api import build_model, ModelBundle
+
+__all__ = ["build_model", "ModelBundle"]

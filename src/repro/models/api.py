@@ -1,0 +1,127 @@
+"""Unified model API: build init/loss/prefill/decode closures per arch.
+
+``build_model(cfg, parallel)`` returns a :class:`ModelBundle` whose members
+are pure functions over parameter pytrees.  ``input_specs(cell)`` produces
+``ShapeDtypeStruct`` stand-ins for every model input of an assigned shape
+cell — the dry-run lowers against these without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.parallel import ParallelConfig
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    parallel: Optional[ParallelConfig]
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., tuple]
+    prefill: Callable[..., tuple]
+    decode_step: Callable[..., tuple]
+    init_cache: Callable[[int, int], Any]
+
+    # -- dry-run inputs --------------------------------------------------------
+    def param_shapes(self, seed: int = 0):
+        return jax.eval_shape(self.init, jax.random.key(seed))
+
+    def train_input_specs(self, cell: ShapeCell) -> dict:
+        b, s = cell.global_batch, cell.seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+        specs.update(self._frontend_specs(b))
+        return specs
+
+    def prefill_input_specs(self, cell: ShapeCell) -> dict:
+        b, s = cell.global_batch, cell.seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        specs.update(self._frontend_specs(b))
+        return specs
+
+    def decode_input_specs(self, cell: ShapeCell) -> dict:
+        b, s = cell.global_batch, cell.seq_len
+        cache_shapes = jax.eval_shape(lambda: self.init_cache(b, s))
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "caches": cache_shapes,
+        }
+
+    def _frontend_specs(self, b: int) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.frontend == "patch_stub":
+            return {
+                "patch_emb": jax.ShapeDtypeStruct(
+                    (b, cfg.frontend_len, cfg.d_model), dt
+                )
+            }
+        if cfg.frontend == "audio_stub":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, cfg.frontend_len, cfg.d_model), dt)
+            }
+        return {}
+
+
+def build_model(
+    cfg: ArchConfig, parallel: Optional[ParallelConfig] = None
+) -> ModelBundle:
+    cfg.validate()
+    if cfg.is_encoder_decoder:
+
+        def init(key):
+            return encdec.init_params(key, cfg)
+
+        def loss(params, batch):
+            return encdec.loss_fn(params, batch, cfg, parallel)
+
+        def prefill_fn(params, batch, cache_len=None):
+            return encdec.prefill(
+                params, batch["tokens"], batch["frames"], cfg, cache_len=cache_len
+            )
+
+        def decode_fn(params, caches, token, pos):
+            return encdec.decode_step(params, caches, token, pos, cfg)
+
+        def init_cache(batch, cache_len):
+            return encdec.init_cache(cfg, batch, cache_len)
+
+    else:
+
+        def init(key):
+            return transformer.init_params(key, cfg)
+
+        def loss(params, batch):
+            return transformer.loss_fn(params, batch, cfg, parallel)
+
+        def prefill_fn(params, batch, cache_len=None):
+            return transformer.prefill(
+                params,
+                batch["tokens"],
+                cfg,
+                parallel,
+                cache_len=cache_len,
+                prefix_emb=batch.get("patch_emb"),
+            )
+
+        def decode_fn(params, caches, token, pos):
+            return transformer.decode_step(params, caches, token, pos, cfg, parallel)
+
+        def init_cache(batch, cache_len):
+            return transformer.init_cache(cfg, batch, cache_len)
+
+    return ModelBundle(
+        cfg=cfg,
+        parallel=parallel,
+        init=init,
+        loss=loss,
+        prefill=prefill_fn,
+        decode_step=decode_fn,
+        init_cache=init_cache,
+    )

@@ -1,0 +1,331 @@
+"""Grouped-query attention with KV cache, SWA/local windows and qk_norm.
+
+Two implementations behind ``cfg.attention_impl``:
+
+* ``xla`` — grouped einsum with online masks; GSPMD-partitioned. Default on
+  CPU (smoke tests, dry-run lowering).
+* ``flash_pallas`` — the Pallas flash kernel (TPU target; interpret-mode on
+  CPU).  Selected for real-TPU runs.
+
+The KV cache layout is ``(B, KV_heads, S_max, head_dim)``; decode writes one
+token at ``cache_pos`` with ``dynamic_update_slice`` (the serve layer shards
+B over the dp axes and KV/S over ``model`` — see repro/serve/kvcache.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+_NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, KV, S_max, hd)
+    v: jax.Array  # (B, KV, S_max, hd)
+
+
+class RingKVCache(NamedTuple):
+    """Fixed-window ring buffer for SWA/local-attention decode.
+
+    Keeps the cache O(window) instead of O(seq_len) — this is what makes
+    long_500k decode sub-quadratic for the hybrid archs and shrinks
+    mixtral's decode_32k cache 8×.
+    """
+
+    k: jax.Array  # (B, KV, W, hd)
+    v: jax.Array  # (B, KV, W, hd)
+    kpos: jax.Array  # (B, W) int32 absolute positions, -1 = empty
+
+
+def init_attention(key, cfg: ArchConfig, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    hd = cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(k1, d, cfg.num_heads * hd),
+        "wk": layers.dense_init(k2, d, cfg.num_kv_heads * hd),
+        "wv": layers.dense_init(k3, d, cfg.num_kv_heads * hd),
+        "wo": layers.dense_init(k4, cfg.num_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(hd)
+        p["k_norm"] = layers.rmsnorm_init(hd)
+    return p
+
+
+def _project_qkv(params, x, cfg: ArchConfig, positions):
+    """x (B,S,d) → q (B,KV,G,S,hd), k/v (B,KV,S,hd) with rope + qk_norm."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    kv = cfg.num_kv_heads
+    g = cfg.q_per_kv
+    dtype = x.dtype
+    q = jnp.dot(x, params["wq"].astype(dtype)).reshape(b, s, kv, g, hd)
+    k = jnp.dot(x, params["wk"].astype(dtype)).reshape(b, s, kv, hd)
+    v = jnp.dot(x, params["wv"].astype(dtype)).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, params["q_norm"])
+        k = layers.rmsnorm(k, params["k_norm"])
+    if positions is not None:  # rope (None for whisper-style abs pos)
+        q = layers.apply_rope(q, positions[:, :, None, None], cfg.rope_theta)
+        k = layers.apply_rope(k, positions[:, :, None], cfg.rope_theta)
+    q = q.transpose(0, 2, 3, 1, 4)  # (B, KV, G, S, hd)
+    k = k.transpose(0, 2, 1, 3)  # (B, KV, S, hd)
+    v = v.transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _masked_attention(q, k, v, *, causal, window, q_offset, kv_len_mask=None):
+    """Grouped einsum attention.  q (B,KV,G,Sq,hd), k/v (B,KV,Skv,hd).
+
+    ``q_offset``: absolute position of q row 0 minus kv row 0 (decode offset).
+    ``kv_len_mask``: optional (B, Skv) bool — live cache entries.
+
+    The ``flash_fusable`` named scope marks the q·kᵀ→softmax→·v region the
+    Pallas flash kernel (kernels/flash_attention.py) keeps in VMEM: the
+    roofline's HBM model (analysis/hlo_cost.py) treats the scope as one
+    fused kernel — S² score tensors never touch HBM on the TPU target.
+    """
+    *_, sq, hd = q.shape
+    skv = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    with jax.named_scope("flash_fusable"):
+        s = jnp.einsum(
+            "bkgsd,bktd->bkgst", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+        )
+        q_pos = q_offset + jnp.arange(sq)[:, None]
+        k_pos = jnp.arange(skv)[None, :]
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+            if window is not None:
+                mask &= k_pos > q_pos - window
+        elif window is not None:
+            mask &= jnp.abs(k_pos - q_pos) < window
+        m = mask[None, None, None]
+        if kv_len_mask is not None:
+            m = m & kv_len_mask[:, None, None, None, :]
+        s = jnp.where(m, s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _flash_attention(q, k, v, *, causal, window):
+    """Pallas flash kernel path (TPU target). q (B,KV,G,S,hd)."""
+    from repro.kernels import ops as kops
+
+    b, kvh, g, s, hd = q.shape
+    qf = q.reshape(b, kvh * g, s, hd)
+    out = kops.flash_attention(qf, k, v, causal=causal, window=window)
+    return out.reshape(b, kvh, g, s, hd)
+
+
+def attention(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: Optional[jax.Array],
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[KVCache] = None,
+    cache_pos: Optional[jax.Array] = None,
+    return_cache: bool = False,
+    cache_len: Optional[int] = None,
+) -> tuple[jax.Array, Optional[KVCache]]:
+    """Self-attention over ``x`` (B, S, d).
+
+    Modes:
+      * train:            cache=None, return_cache=False
+      * prefill:          cache=None, return_cache=True (cache_len sizes it)
+      * decode (S == 1):  cache=KVCache, cache_pos = absolute position (B,)
+    """
+    b, s, _ = x.shape
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+
+    if cache is not None:
+        # decode: write the new token at cache_pos, attend over the cache.
+        k_cache, v_cache = cache
+        pos = cache_pos.reshape(b)  # (B,)
+
+        def upd(c, new):
+            return jax.vmap(
+                lambda cb, nb, pb: jax.lax.dynamic_update_slice(
+                    cb, nb, (0, pb, 0)
+                )
+            )(c, new, pos)
+
+        k_all = upd(k_cache, k_new)
+        v_all = upd(v_cache, v_new)
+        kv_len_mask = (
+            jnp.arange(k_all.shape[2])[None, :] <= pos[:, None]
+        )  # (B, S_max)
+        # window masking happens relative to absolute positions:
+        out = _masked_attention_decode(
+            q, k_all, v_all, pos, window=window, kv_len_mask=kv_len_mask
+        )
+        new_cache = KVCache(k_all, v_all)
+    else:
+        if cfg.attention_impl == "flash_pallas" and s > 1:
+            out = _flash_attention(q, k_new, v_new, causal=causal, window=window)
+        else:
+            out = _masked_attention(
+                q, k_new, v_new, causal=causal, window=window, q_offset=0
+            )
+        new_cache = None
+        if return_cache:
+            smax = cache_len or s
+            pad = smax - s
+            k_c = jnp.pad(k_new, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v_c = jnp.pad(v_new, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            new_cache = KVCache(k_c, v_c)
+
+    b_, kv, g, s_, hd = out.shape
+    merged = out.transpose(0, 3, 1, 2, 4).reshape(b, s, kv * g * hd)
+    return jnp.dot(merged, params["wo"].astype(x.dtype)), new_cache
+
+
+def _masked_attention_decode(q, k, v, pos, *, window, kv_len_mask):
+    """Decode attention: q (B,KV,G,1,hd) vs full cache (B,KV,Smax,hd).
+
+    ``flash_fusable``: the flash-decode kernel streams the cache once and
+    keeps scores in VMEM (see _masked_attention docstring).
+    """
+    hd = q.shape[-1]
+    skv = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    with jax.named_scope("flash_fusable"):
+        s = jnp.einsum(
+            "bkgsd,bktd->bkgst", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+        )
+        k_pos = jnp.arange(skv)[None, :]
+        m = kv_len_mask  # (B, Smax): k_pos <= pos
+        if window is not None:
+            m = m & (k_pos > pos[:, None] - window)
+        s = jnp.where(m[:, None, None, None, :], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ring_prefill_cache(
+    k: jax.Array, v: jax.Array, seq_len: int, window: int
+) -> RingKVCache:
+    """Build a ring cache from full prefill k/v (B, KV, S, hd)."""
+    b = k.shape[0]
+    w = window
+    if seq_len >= w:
+        pos = jnp.arange(seq_len - w, seq_len, dtype=jnp.int32)
+        slots = pos % w
+        rk = jnp.zeros(k.shape[:2] + (w,) + k.shape[3:], k.dtype)
+        rv = jnp.zeros_like(rk)
+        rk = rk.at[:, :, slots].set(k[:, :, -w:])
+        rv = rv.at[:, :, slots].set(v[:, :, -w:])
+        kpos = jnp.full((b, w), -1, jnp.int32).at[:, slots].set(pos[None, :])
+    else:
+        pad = w - seq_len
+        rk = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        rv = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kpos = jnp.concatenate(
+            [
+                jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32), (b, seq_len)),
+                jnp.full((b, pad), -1, jnp.int32),
+            ],
+            axis=1,
+        )
+    return RingKVCache(rk, rv, kpos)
+
+
+def ring_decode_attention(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    cache: RingKVCache,
+    pos: jax.Array,
+    window: int,
+) -> tuple[jax.Array, RingKVCache]:
+    """One-token decode against a ring cache.  x (B,1,d), pos (B,)."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x, cfg, pos.reshape(b, 1))
+    slot = (pos % window).astype(jnp.int32)
+
+    def upd(c, new):
+        return jax.vmap(
+            lambda cb, nb, sb: jax.lax.dynamic_update_slice(cb, nb, (0, sb, 0))
+        )(c, new, slot)
+
+    k_all = upd(cache.k, k_new)
+    v_all = upd(cache.v, v_new)
+    kpos = jax.vmap(lambda kp, sb, pb: jax.lax.dynamic_update_slice(kp, pb[None], (sb,)))(
+        cache.kpos, slot, pos.astype(jnp.int32)
+    )
+    valid = (kpos >= 0) & (kpos <= pos[:, None]) & (kpos > pos[:, None] - window)
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    with jax.named_scope("flash_fusable"):
+        s = jnp.einsum(
+            "bkgsd,bktd->bkgst",
+            q.astype(jnp.float32) * scale,
+            k_all.astype(jnp.float32),
+        )
+        s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgst,bktd->bkgsd", p, v_all.astype(jnp.float32)).astype(
+            x.dtype
+        )
+    kv, g = out.shape[1], out.shape[2]
+    merged = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, kv * g * hd)
+    proj = jnp.dot(merged, params["wo"].astype(x.dtype))
+    return proj, RingKVCache(k_all, v_all, kpos)
+
+
+def cross_attention(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    enc_k: jax.Array,
+    enc_v: jax.Array,
+) -> jax.Array:
+    """Cross-attention (whisper decoder): kv precomputed from the encoder.
+
+    ``enc_k``/``enc_v``: (B, KV, T_enc, hd).
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    kv = cfg.num_kv_heads
+    g = cfg.q_per_kv
+    dtype = x.dtype
+    q = (
+        jnp.dot(x, params["wq"].astype(dtype))
+        .reshape(b, s, kv, g, hd)
+        .transpose(0, 2, 3, 1, 4)
+    )
+    out = _masked_attention(q, enc_k, enc_v, causal=False, window=None, q_offset=0)
+    merged = out.transpose(0, 3, 1, 2, 4).reshape(b, s, kv * g * hd)
+    return jnp.dot(merged, params["wo"].astype(dtype))
+
+
+def encoder_kv(params: dict, enc_out: jax.Array, cfg: ArchConfig):
+    """Precompute cross-attention k/v from encoder output (B, T, d)."""
+    b, t, _ = enc_out.shape
+    hd = cfg.head_dim_
+    kv = cfg.num_kv_heads
+    dtype = enc_out.dtype
+    k = (
+        jnp.dot(enc_out, params["wk"].astype(dtype))
+        .reshape(b, t, kv, hd)
+        .transpose(0, 2, 1, 3)
+    )
+    v = (
+        jnp.dot(enc_out, params["wv"].astype(dtype))
+        .reshape(b, t, kv, hd)
+        .transpose(0, 2, 1, 3)
+    )
+    return k, v

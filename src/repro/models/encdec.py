@@ -1,0 +1,225 @@
+"""Encoder-decoder model (whisper-base backbone).
+
+Per assignment the conv/mel frontend is a STUB: the model consumes
+precomputed frame embeddings (B, T_frames, d_model) from ``input_specs``.
+Encoder: non-causal attention + GELU MLP (biases), sinusoidal positions.
+Decoder: causal self-attention (+cache), cross-attention over encoder
+output, GELU MLP.  Embedding weights are tied with the LM head (whisper).
+
+RMSNorm is used in place of LayerNorm throughout the framework (noted in
+DESIGN.md §deviations — a norm-flavor swap, not a structural change).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import layers
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_mlp(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": layers.dense_init(k1, cfg.d_model, cfg.d_ff),
+        "b_in": jnp.zeros((cfg.d_ff,), jnp.float32),
+        "w_out": layers.dense_init(k2, cfg.d_ff, cfg.d_model),
+        "b_out": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def _init_enc_layer(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": layers.rmsnorm_init(cfg.d_model),
+        "attn": attn.init_attention(k1, cfg),
+        "norm2": layers.rmsnorm_init(cfg.d_model),
+        "mlp": _init_mlp(k2, cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": layers.rmsnorm_init(cfg.d_model),
+        "self_attn": attn.init_attention(k1, cfg),
+        "norm_x": layers.rmsnorm_init(cfg.d_model),
+        "cross_attn": attn.init_attention(k2, cfg),
+        "norm2": layers.rmsnorm_init(cfg.d_model),
+        "mlp": _init_mlp(k3, cfg),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ke, k1, k2 = jax.random.split(key, 3)
+    ekeys = jax.random.split(k1, cfg.encoder_layers)
+    dkeys = jax.random.split(k2, cfg.num_layers)
+    return {
+        "embed": layers.truncated_normal_init(ke, (cfg.vocab_size, cfg.d_model), 1.0),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(ekeys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dkeys),
+        "enc_norm": layers.rmsnorm_init(cfg.d_model),
+        "dec_norm": layers.rmsnorm_init(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+def encode(params, frames: jax.Array, cfg: ArchConfig, parallel=None) -> jax.Array:
+    """frames (B, T, d) — precomputed frontend embeddings (stub)."""
+    b, t, d = frames.shape
+    x = frames.astype(_dtype(cfg)) + layers.sinusoidal_positions(t, d).astype(
+        _dtype(cfg)
+    )
+    if parallel is not None:
+        x = parallel.shard_act(x)
+
+    def step(x, p):
+        xin = layers.rmsnorm(x, p["norm1"])
+        out, _ = attn.attention(p["attn"], xin, cfg, None, causal=False)
+        x = x + out
+        xin = layers.rmsnorm(x, p["norm2"])
+        x = x + layers.gelu_mlp(
+            xin, p["mlp"]["w_in"], p["mlp"]["b_in"], p["mlp"]["w_out"], p["mlp"]["b_out"]
+        )
+        if parallel is not None:
+            x = parallel.shard_act(x)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x, params["enc_layers"])
+    return layers.rmsnorm(x, params["enc_norm"])
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+def _dec_block_train(p, x, enc_out, cfg):
+    xin = layers.rmsnorm(x, p["norm1"])
+    out, _ = attn.attention(p["self_attn"], xin, cfg, None, causal=True)
+    x = x + out
+    xin = layers.rmsnorm(x, p["norm_x"])
+    ek, ev = attn.encoder_kv(p["cross_attn"], enc_out, cfg)
+    x = x + attn.cross_attention(p["cross_attn"], xin, cfg, ek, ev)
+    xin = layers.rmsnorm(x, p["norm2"])
+    x = x + layers.gelu_mlp(
+        xin, p["mlp"]["w_in"], p["mlp"]["b_in"], p["mlp"]["w_out"], p["mlp"]["b_out"]
+    )
+    return x
+
+
+def forward_train(params, tokens: jax.Array, frames: jax.Array, cfg: ArchConfig,
+                  parallel=None):
+    """tokens (B, S+1), frames (B, T, d) → logits (B, S, V)."""
+    enc_out = encode(params, frames, cfg, parallel)
+    inputs = tokens[:, :-1]
+    b, s = inputs.shape
+    x = jnp.take(params["embed"], inputs, axis=0).astype(_dtype(cfg))
+    x = x + layers.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    if parallel is not None:
+        x = parallel.shard_act(x)
+
+    def step(x, p):
+        x = _dec_block_train(p, x, enc_out, cfg)
+        if parallel is not None:
+            x = parallel.shard_act(x)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x, params["dec_layers"])
+    x = layers.rmsnorm(x, params["dec_norm"])
+    return jnp.dot(x, params["embed"].T.astype(x.dtype))
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, parallel=None, aux_coef=0.0):
+    logits = forward_train(params, batch["tokens"], batch["frames"], cfg, parallel)
+    labels = batch["tokens"][:, 1:]
+    ce = layers.softmax_cross_entropy_logits(logits, labels)
+    return ce, {"loss": ce, "ce": ce, "moe_aux": jnp.zeros(())}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def prefill(
+    params,
+    tokens: jax.Array,
+    frames: jax.Array,
+    cfg: ArchConfig,
+    cache_len: Optional[int] = None,
+):
+    """Encode audio + consume prompt tokens; returns (logits, caches)."""
+    enc_out = encode(params, frames, cfg)
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    x = x + layers.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+
+    def step(x, p):
+        xin = layers.rmsnorm(x, p["norm1"])
+        out, cache = attn.attention(
+            p["self_attn"], xin, cfg, None, causal=True,
+            return_cache=True, cache_len=cache_len,
+        )
+        x = x + out
+        xin = layers.rmsnorm(x, p["norm_x"])
+        ek, ev = attn.encoder_kv(p["cross_attn"], enc_out, cfg)
+        x = x + attn.cross_attention(p["cross_attn"], xin, cfg, ek, ev)
+        xin = layers.rmsnorm(x, p["norm2"])
+        x = x + layers.gelu_mlp(
+            xin, p["mlp"]["w_in"], p["mlp"]["b_in"], p["mlp"]["w_out"], p["mlp"]["b_out"]
+        )
+        return x, {"self": cache, "cross_k": ek, "cross_v": ev}
+
+    x, caches = jax.lax.scan(step, x, params["dec_layers"])
+    x = layers.rmsnorm(x[:, -1:], params["dec_norm"])
+    logits = jnp.dot(x, params["embed"].T.astype(x.dtype))[:, 0]
+    return logits, caches
+
+
+def decode_step(params, caches, token: jax.Array, pos: jax.Array, cfg: ArchConfig):
+    """One decode token. token (B,1), pos (B,)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(_dtype(cfg))
+    x = x + layers.sinusoidal_at(pos, cfg.d_model)[:, None, :].astype(x.dtype)
+
+    def step(x, pc):
+        p, c = pc
+        xin = layers.rmsnorm(x, p["norm1"])
+        out, self_cache = attn.attention(
+            p["self_attn"], xin, cfg, None, causal=True,
+            cache=c["self"], cache_pos=pos,
+        )
+        x = x + out
+        xin = layers.rmsnorm(x, p["norm_x"])
+        x = x + attn.cross_attention(
+            p["cross_attn"], xin, cfg, c["cross_k"], c["cross_v"]
+        )
+        xin = layers.rmsnorm(x, p["norm2"])
+        x = x + layers.gelu_mlp(
+            xin, p["mlp"]["w_in"], p["mlp"]["b_in"], p["mlp"]["w_out"], p["mlp"]["b_out"]
+        )
+        return x, {"self": self_cache, "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    x, new_caches = jax.lax.scan(step, x, (params["dec_layers"], caches))
+    x = layers.rmsnorm(x, params["dec_norm"])
+    logits = jnp.dot(x, params["embed"].T.astype(x.dtype))[:, 0]
+    return logits, new_caches
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    """Zero self caches + zero cross kv (stacked over decoder layers)."""
+    dt = _dtype(cfg)
+    hd = cfg.head_dim_
+    kv = cfg.num_kv_heads
+    z = jnp.zeros((cfg.num_layers, batch, kv, cache_len, hd), dt)
+    ck = jnp.zeros((cfg.num_layers, batch, kv, cfg.frontend_len, hd), dt)
+    return {"self": attn.KVCache(z, z), "cross_k": ck, "cross_v": ck}

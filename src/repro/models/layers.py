@@ -1,0 +1,106 @@
+"""Shared neural-net building blocks (pure JAX, no framework deps)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    """He/Glorot-style init used across the stack."""
+    stddev = scale / math.sqrt(shape[0] if len(shape) > 1 else 1.0)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * stddev).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return truncated_normal_init(key, (d_in, d_out), 1.0, dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in f32 with cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: silu(x·Wg) * (x·Wu) · Wd — the LM-family FFN."""
+    dtype = x.dtype
+    g = jnp.dot(x, w_gate.astype(dtype))
+    u = jnp.dot(x, w_up.astype(dtype))
+    return jnp.dot(jax.nn.silu(g) * u, w_down.astype(dtype))
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in, w_out: jax.Array, b_out) -> jax.Array:
+    """GELU MLP (whisper-style, with biases)."""
+    dtype = x.dtype
+    h = jnp.dot(x, w_in.astype(dtype)) + b_in.astype(dtype)
+    h = jax.nn.gelu(h)
+    return jnp.dot(h, w_out.astype(dtype)) + b_out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """Rotate pairs of channels. ``x``: (..., S, head_dim); positions (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_at(pos: jax.Array, d_model: int) -> jax.Array:
+    """Sinusoidal embedding of arbitrary integer positions. pos (...,) → (..., d)."""
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)
+    angle = pos.astype(jnp.float32)[..., None] / jnp.power(10000.0, dim / d_model)
+    out = jnp.zeros(pos.shape + (d_model,), jnp.float32)
+    out = out.at[..., 0::2].set(jnp.sin(angle))
+    out = out.at[..., 1::2].set(jnp.cos(angle))
+    return out
+
+
+def sinusoidal_positions(length: int, d_model: int) -> jax.Array:
+    """Fixed sin/cos table (whisper encoder)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((length, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy_logits(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Mean next-token CE in f32. logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,136 @@
+"""RG-LRU / Griffin recurrent block (RecurrentGemma).
+
+Block: x → {gate branch: linear→gelu} ⊗ {rec branch: linear → causal
+depthwise conv (width 4) → RG-LRU} → linear out (+ residual).
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = σ(W_a x_t + b_a)                    (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                    (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t),  c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence is diagonal-linear, so training uses
+``jax.lax.associative_scan`` (parallel over the sequence, O(log S) depth);
+decode is a single fused step.  State per token: (B, rnn_width) — O(1)
+memory per decode step, which is what qualifies this arch for long_500k.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (B, d_rnn) recurrent state
+    conv: jax.Array  # (B, conv_width-1, d_rnn) trailing conv inputs
+
+
+def init_rglru(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    dr = cfg.rnn_width
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 8)
+    # Λ init so that a ∈ (0.9, 0.999) at r=1 (paper's init range)
+    u = jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "norm": layers.rmsnorm_init(d),
+        "w_gate": layers.dense_init(ks[0], d, dr),
+        "w_rec": layers.dense_init(ks[1], d, dr),
+        "conv_w": (
+            jax.random.normal(ks[2], (cw, dr), jnp.float32) / jnp.sqrt(float(cw))
+        ),
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_a": layers.dense_init(ks[3], dr, dr),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": layers.dense_init(ks[4], dr, dr),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "lambda": lam,
+        "w_out": layers.dense_init(ks[6], dr, d),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array, prev=None):
+    """x (B,S,d), w (cw,d). ``prev`` (B,cw-1,d) carries decode history."""
+    cw = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)  # (B, S+cw-1, d)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(cw)
+    )
+    tail = xp[:, -(cw - 1) :] if cw > 1 else jnp.zeros_like(prev)
+    return out + b.astype(x.dtype), tail
+
+
+def _rglru_scan(a: jax.Array, bterm: jax.Array, h0: jax.Array):
+    """h_t = a_t h_{t-1} + b_t via associative scan. a/b: (B,S,d) f32."""
+    # fold h0 into the first step
+    bterm = bterm.at[:, 0].add(a[:, 0] * h0)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, bterm), axis=1)
+    return h
+
+
+def rglru_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    state: Optional[RGLRUState] = None,
+    *,
+    return_state: bool = False,
+):
+    """Griffin recurrent residual block. x (B,S,d) → (out, new_state)."""
+    b, s, d = x.shape
+    dr = cfg.rnn_width
+    dtype = x.dtype
+    xin = layers.rmsnorm(x, params["norm"])
+    gate = jax.nn.gelu(jnp.dot(xin, params["w_gate"].astype(dtype)))
+    u = jnp.dot(xin, params["w_rec"].astype(dtype))
+    prev = state.conv if state is not None else None
+    u, conv_tail = _causal_depthwise_conv(u, params["conv_w"], params["conv_b"], prev)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        jnp.dot(uf, params["w_a"].astype(jnp.float32)) + params["b_a"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.dot(uf, params["w_x"].astype(jnp.float32)) + params["b_x"]
+    )
+    log_a = -_C * jax.nn.softplus(params["lambda"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    bterm = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    h0 = state.h if state is not None else jnp.zeros((b, dr), jnp.float32)
+    if s == 1:  # decode fast path — no scan
+        h = (a[:, 0] * h0 + bterm[:, 0])[:, None, :]
+    else:
+        h = _rglru_scan(a, bterm, h0)
+    hseq = h.astype(dtype) * gate
+    out = x + jnp.dot(hseq, params["w_out"].astype(dtype))
+    new_state = None
+    if return_state:
+        new_state = RGLRUState(h=h[:, -1], conv=conv_tail)
+    return out, new_state
+
+
+def rglru_decode_step(params, x, cfg: ArchConfig, state: RGLRUState):
+    return rglru_block(params, x, cfg, state, return_state=True)
+
+
+def rglru_init_state(cfg: ArchConfig, batch: int) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width), jnp.float32),
+    )

@@ -1,0 +1,260 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and recurrent sLSTM.
+
+mLSTM (matrix LSTM) maintains a per-head matrix state
+``C_t = f_t·C_{t-1} + i_t·v_t k_tᵀ`` with read-out
+``h_t = (C_t q_t) / max(|n_t·q_t|, 1)``.  We implement the **exact chunkwise
+factorization** (GLA-style): within a chunk of Q tokens the contribution is
+a decay-weighted causal attention; across chunks only the (dk × dv) state is
+carried — so training is parallel over the sequence and the lax.scan is
+over S/Q chunk summaries, not S tokens.  Deviation from the paper noted in
+DESIGN.md: sigmoid input/forget gates (instead of exp-with-stabilizer),
+which keeps the decay ratios in (0,1] and the chunkwise form numerically
+stable in bf16.
+
+sLSTM has recurrent state feedback (h_{t-1} enters the gates), which is
+inherently sequential — implemented as a lax.scan over time with per-head
+block-diagonal recurrent weights, exactly as the paper describes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dk, dv)
+    n: jax.Array  # (B, H, dk)
+
+
+def init_mlstm(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_inner = int(cfg.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    dv = d_inner // h
+    dk = max(16, dv // 2)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": layers.rmsnorm_init(d),
+        "w_up": layers.dense_init(ks[0], d, d_inner),
+        "w_gate": layers.dense_init(ks[1], d, d_inner),
+        "wq": layers.dense_init(ks[2], d_inner, h * dk),
+        "wk": layers.dense_init(ks[3], d_inner, h * dk),
+        "wv": layers.dense_init(ks[4], d_inner, h * dv),
+        "w_if": layers.dense_init(ks[5], d_inner, 2 * h),  # input+forget gates
+        "out_norm": layers.rmsnorm_init(d_inner),
+        "w_down": layers.dense_init(ks[6], d_inner, d),
+    }
+
+
+def mlstm_dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    d_inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    dv = d_inner // h
+    dk = max(16, dv // 2)
+    return h, dk, dv
+
+
+def _mlstm_chunk(q, k, v, log_f, i_gate, state: MLSTMState):
+    """Exact chunkwise mLSTM over one chunk.
+
+    q/k: (B,H,Q,dk), v: (B,H,Q,dv), log_f/i_gate: (B,H,Q).
+    Returns (h (B,H,Q,dv), new_state).
+    """
+    bq = q.shape[2]
+    # cumulative decay within the chunk: F_t = Π_{u<=t} f_u
+    cum = jnp.cumsum(log_f, axis=-1)  # (B,H,Q) = log F_t
+    total = cum[..., -1]
+    # inter-chunk: contribution of carried state, decayed to each position.
+    decay_to_t = jnp.exp(cum)[..., None]  # (B,H,Q,1)
+    h_inter = jnp.einsum("bhqk,bhkv->bhqv", q, state.c) * decay_to_t
+    n_inter = jnp.einsum("bhqk,bhk->bhq", q, state.n) * decay_to_t[..., 0]
+    # intra-chunk: decay-weighted causal attention.
+    # ratio[t,s] = exp(logF_t - logF_s) for s <= t  (in (0,1], stable)
+    ratio = jnp.exp(cum[..., :, None] - cum[..., None, :])  # (B,H,Q,Q)
+    causal = jnp.tril(jnp.ones((bq, bq), bool))
+    gate = jnp.where(causal, ratio * i_gate[..., None, :], 0.0)
+    scores = jnp.einsum("bhqk,bhsk->bhqs", q, k) * gate
+    h_intra = jnp.einsum("bhqs,bhsv->bhqv", scores, v)
+    # normalizer q_t·n_t = Σ_{s<=t} ratio·i_s·(q_t·k_s) — exactly Σ_s scores.
+    qn = jnp.sum(scores, axis=-1) + n_inter  # (B,H,Q)
+    denom = jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+    h = (h_intra + h_inter) / denom
+    # state update: C' = F_Q·C + Σ_s (F_Q/F_s) i_s k_s v_sᵀ
+    carry_decay = jnp.exp(total)[..., None, None]
+    tail = jnp.exp(total[..., None] - cum) * i_gate  # (B,H,Q)
+    c_new = state.c * carry_decay + jnp.einsum(
+        "bhsk,bhsv->bhkv", k * tail[..., None], v
+    )
+    n_new = state.n * carry_decay[..., 0] + jnp.sum(k * tail[..., None], axis=2)
+    return h, MLSTMState(c_new, n_new)
+
+
+def mlstm_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    state: Optional[MLSTMState] = None,
+    *,
+    chunk: int = 256,
+    return_state: bool = False,
+):
+    """Full mLSTM residual block. x (B,S,d) → (out, new_state)."""
+    b, s, d = x.shape
+    h, dk, dv = mlstm_dims(cfg)
+    d_inner = h * dv
+    dtype = x.dtype
+    xin = layers.rmsnorm(x, params["norm"])
+    z = jax.nn.silu(jnp.dot(xin, params["w_gate"].astype(dtype)))
+    u = jnp.dot(xin, params["w_up"].astype(dtype))
+    q = jnp.dot(u, params["wq"].astype(dtype)).reshape(b, s, h, dk)
+    k = jnp.dot(u, params["wk"].astype(dtype)).reshape(b, s, h, dk) / jnp.sqrt(
+        jnp.float32(dk)
+    ).astype(dtype)
+    v = jnp.dot(u, params["wv"].astype(dtype)).reshape(b, s, h, dv)
+    gates = jnp.dot(u, params["w_if"].astype(dtype)).reshape(b, s, 2, h)
+    i_gate = jax.nn.sigmoid(gates[:, :, 0].astype(jnp.float32))  # (B,S,H)
+    f_gate = jax.nn.sigmoid(gates[:, :, 1].astype(jnp.float32))
+    log_f = jnp.log(jnp.maximum(f_gate, 1e-6))
+
+    # (B,H,S,*) layout, f32 recurrence internals
+    qt = q.transpose(0, 2, 1, 3).astype(jnp.float32)
+    kt = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vt = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    ig = i_gate.transpose(0, 2, 1)
+    lf = log_f.transpose(0, 2, 1)
+
+    if state is None:
+        state = MLSTMState(
+            c=jnp.zeros((b, h, dk, dv), jnp.float32),
+            n=jnp.zeros((b, h, dk), jnp.float32),
+        )
+
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ig = jnp.pad(ig, ((0, 0), (0, 0), (0, pad)))
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+    nchunks = qt.shape[2] // chunk
+
+    def body(st, xs):
+        qc, kc, vc, ic, fc = xs
+        hc, st2 = _mlstm_chunk(qc, kc, vc, fc, ic, st)
+        return st2, hc
+
+    xs = (
+        qt.reshape(b, h, nchunks, chunk, dk).transpose(2, 0, 1, 3, 4),
+        kt.reshape(b, h, nchunks, chunk, dk).transpose(2, 0, 1, 3, 4),
+        vt.reshape(b, h, nchunks, chunk, dv).transpose(2, 0, 1, 3, 4),
+        ig.reshape(b, h, nchunks, chunk).transpose(2, 0, 1, 3),
+        lf.reshape(b, h, nchunks, chunk).transpose(2, 0, 1, 3),
+    )
+    state_f, hs = jax.lax.scan(body, state, xs)
+    hs = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, nchunks * chunk, dv)[:, :, :s]
+    hs = hs.transpose(0, 2, 1, 3).reshape(b, s, d_inner).astype(dtype)
+    hs = layers.rmsnorm(hs, params["out_norm"]) * z
+    out = x + jnp.dot(hs, params["w_down"].astype(dtype))
+    return out, (state_f if return_state else None)
+
+
+def mlstm_decode_step(params, x, cfg: ArchConfig, state: MLSTMState):
+    """Single-token mLSTM step. x (B,1,d)."""
+    out, st = mlstm_block(params, x, cfg, state, chunk=1, return_state=True)
+    return out, st
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, d)
+    n: jax.Array  # (B, d)
+    h: jax.Array  # (B, d)
+    m: jax.Array  # (B, d) stabilizer
+
+
+def init_slstm(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": layers.rmsnorm_init(d),
+        # input projections for gates i, f, z, o
+        "w_in": layers.dense_init(ks[0], d, 4 * d),
+        # block-diagonal recurrent weights per head: (H, 4, hd, hd)
+        "r": (
+            jax.random.normal(ks[1], (h, 4, hd, hd), jnp.float32)
+            / jnp.sqrt(jnp.float32(hd))
+        ),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "out_norm": layers.rmsnorm_init(d),
+        "w_down": layers.dense_init(ks[2], d, d),
+    }
+
+
+def _slstm_step(params, cfg: ArchConfig, xt: jax.Array, st: SLSTMState) -> tuple:
+    """One sLSTM timestep. xt: (B, 4d) preprojected input contribution."""
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    b = xt.shape[0]
+    # recurrent contribution: per-head block-diagonal matmul of h_{t-1}
+    hprev = st.h.reshape(b, h, hd)
+    rec = jnp.einsum("bhd,hgde->bhge", hprev, params["r"])  # (B,H,4,hd)
+    rec = rec.transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    pre = xt + rec + params["b"]
+    itil, ftil, ztil, otil = jnp.split(pre, 4, axis=-1)
+    # exponential gating with stabilizer (paper eq. sLSTM)
+    m_new = jnp.maximum(ftil + st.m, itil)
+    i = jnp.exp(itil - m_new)
+    f = jnp.exp(ftil + st.m - m_new)
+    z = jnp.tanh(ztil)
+    o = jax.nn.sigmoid(otil)
+    c = f * st.c + i * z
+    n = f * st.n + i
+    hnew = o * c / jnp.maximum(n, 1.0)
+    return hnew, SLSTMState(c, n, hnew, m_new)
+
+
+def slstm_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    state: Optional[SLSTMState] = None,
+    *,
+    return_state: bool = False,
+):
+    """Recurrent sLSTM residual block. x (B,S,d)."""
+    b, s, d = x.shape
+    dtype = x.dtype
+    xin = layers.rmsnorm(x, params["norm"])
+    pre = jnp.dot(xin, params["w_in"].astype(dtype)).astype(jnp.float32)  # (B,S,4d)
+    if state is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        state = SLSTMState(z, z, z, jnp.full((b, d), -1e30, jnp.float32))
+
+    def body(st, xt):
+        hnew, st2 = _slstm_step(params, cfg, xt, st)
+        return st2, hnew
+
+    state_f, hs = jax.lax.scan(body, state, pre.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(dtype)  # (B,S,d)
+    hs = layers.rmsnorm(hs, params["out_norm"])
+    out = x + jnp.dot(hs, params["w_down"].astype(dtype))
+    return out, (state_f if return_state else None)
+
+
+def slstm_decode_step(params, x, cfg: ArchConfig, state: SLSTMState):
+    out, st = slstm_block(params, x, cfg, state, return_state=True)
+    return out, st

@@ -1,0 +1,367 @@
+"""Decoder-only LM assembly for dense / MoE / SSM / hybrid / VLM archs.
+
+Layers are stacked per *pattern period* (``cfg.block_pattern``) and driven
+with ``lax.scan`` so the HLO is O(period), not O(num_layers) — llama3-405b's
+126 layers lower as one scanned period.  Block types:
+
+  attn | swa | local  → pre-norm GQA attention (+ SwiGLU MLP or MoE)
+  mlstm | slstm       → xLSTM residual blocks (self-contained)
+  rglru               → Griffin recurrent block (+ MLP when d_ff > 0)
+
+Three modes share the block code: ``train`` (no caches), ``prefill``
+(returns caches), ``decode`` (one token against caches; ring buffers for
+windowed attention).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.parallel import ParallelConfig
+from repro.models import attention as attn
+from repro.models import layers, moe as moe_mod, rglru, ssm
+
+ATTN_TYPES = ("attn", "swa", "local")
+RECURRENT_TYPES = ("mlstm", "slstm", "rglru")
+
+
+def _act_seq_dim(cfg: ArchConfig):
+    """Sequence-parallel residuals are wrong for recurrent blocks: the time
+    scan is sequential, so a seq-sharded residual forces GSPMD to all-gather
+    the sequence and run the recurrence redundantly (measured: per-step
+    weight-grad all-reduces).  SP only for pure-attention stacks."""
+    return None if any(bt in RECURRENT_TYPES for bt in cfg.block_pattern) else 1
+
+
+def block_window(cfg: ArchConfig, bt: str) -> Optional[int]:
+    if bt == "swa":
+        return cfg.sliding_window
+    if bt == "local":
+        return cfg.local_window
+    return None
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ArchConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": layers.dense_init(k1, cfg.d_model, cfg.d_ff),
+        "w_up": layers.dense_init(k2, cfg.d_model, cfg.d_ff),
+        "w_down": layers.dense_init(k3, cfg.d_ff, cfg.d_model),
+    }
+
+
+def init_block(key, cfg: ArchConfig, bt: str) -> dict:
+    ka, kb = jax.random.split(key)
+    if bt in ATTN_TYPES:
+        p: dict[str, Any] = {
+            "norm1": layers.rmsnorm_init(cfg.d_model),
+            "attn": attn.init_attention(ka, cfg),
+        }
+    elif bt == "mlstm":
+        return {"mixer": ssm.init_mlstm(ka, cfg)}
+    elif bt == "slstm":
+        return {"mixer": ssm.init_slstm(ka, cfg)}
+    elif bt == "rglru":
+        p = {"mixer": rglru.init_rglru(ka, cfg)}
+    else:
+        raise ValueError(f"unknown block type {bt}")
+    if cfg.d_ff > 0:
+        p["norm2"] = layers.rmsnorm_init(cfg.d_model)
+        p["mlp"] = init_moe_or_mlp(kb, cfg)
+    return p
+
+
+def init_moe_or_mlp(key, cfg: ArchConfig) -> dict:
+    if cfg.is_moe:
+        return {"moe": moe_mod.init_moe(key, cfg)}
+    return init_mlp(key, cfg)
+
+
+def init_period(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {f"b{j}": init_block(ks[j], cfg, bt) for j, bt in enumerate(cfg.block_pattern)}
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    pkeys = jax.random.split(kl, cfg.num_periods)
+    params = {
+        "embed": layers.truncated_normal_init(ke, (cfg.vocab_size, cfg.d_model), 1.0),
+        "layers": jax.vmap(lambda k: init_period(k, cfg))(pkeys),
+        "final_norm": layers.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(kh, cfg.d_model, cfg.vocab_size)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_block_cache(cfg: ArchConfig, bt: str, batch: int, cache_len: int):
+    dt = _dtype(cfg)
+    hd = cfg.head_dim_
+    kv = cfg.num_kv_heads
+    if bt == "attn":
+        z = jnp.zeros((batch, kv, cache_len, hd), dt)
+        return attn.KVCache(z, z)
+    if bt in ("swa", "local"):
+        w = min(block_window(cfg, bt), cache_len)
+        z = jnp.zeros((batch, kv, w, hd), dt)
+        return attn.RingKVCache(z, z, jnp.full((batch, w), -1, jnp.int32))
+    if bt == "mlstm":
+        h, dk, dv = ssm.mlstm_dims(cfg)
+        return ssm.MLSTMState(
+            c=jnp.zeros((batch, h, dk, dv), jnp.float32),
+            n=jnp.zeros((batch, h, dk), jnp.float32),
+        )
+    if bt == "slstm":
+        z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+        return ssm.SLSTMState(z, z, z, jnp.full((batch, cfg.d_model), -1e30, jnp.float32))
+    if bt == "rglru":
+        return rglru.rglru_init_state(cfg, batch)
+    raise ValueError(bt)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    """Zero caches for all layers: leaves have leading dim num_periods."""
+    per = {
+        f"b{j}": init_block_cache(cfg, bt, batch, cache_len)
+        for j, bt in enumerate(cfg.block_pattern)
+    }
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_periods,) + a.shape), per
+    )
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+def _apply_mlp(p, x, cfg, parallel):
+    """Post-mixer MLP/MoE residual. Returns (x, aux)."""
+    if "mlp" not in p:
+        return x, jnp.zeros((), jnp.float32)
+    xin = layers.rmsnorm(x, p["norm2"])
+    if cfg.is_moe:
+        out, aux = moe_mod.moe(p["mlp"]["moe"], xin, cfg, parallel)
+        return x + out, aux.astype(jnp.float32)
+    out = layers.swiglu(xin, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x + out, jnp.zeros((), jnp.float32)
+
+
+def apply_block_train(bt, p, x, positions, cfg, parallel):
+    if bt in ATTN_TYPES:
+        xin = layers.rmsnorm(x, p["norm1"])
+        out, _ = attn.attention(
+            p["attn"], xin, cfg, positions, causal=True, window=block_window(cfg, bt)
+        )
+        x = x + out
+    elif bt == "mlstm":
+        x, _ = ssm.mlstm_block(p["mixer"], x, cfg)
+    elif bt == "slstm":
+        x, _ = ssm.slstm_block(p["mixer"], x, cfg)
+    elif bt == "rglru":
+        x, _ = rglru.rglru_block(p["mixer"], x, cfg)
+    return _apply_mlp(p, x, cfg, parallel)
+
+
+def apply_block_prefill(bt, p, x, positions, cfg, parallel, cache_len):
+    if bt in ATTN_TYPES:
+        w = block_window(cfg, bt)
+        xin = layers.rmsnorm(x, p["norm1"])
+        if bt == "attn":
+            out, cache = attn.attention(
+                p["attn"], xin, cfg, positions, causal=True, window=w,
+                return_cache=True, cache_len=cache_len,
+            )
+        else:
+            out, full_cache = attn.attention(
+                p["attn"], xin, cfg, positions, causal=True, window=w,
+                return_cache=True, cache_len=x.shape[1],
+            )
+            ring_w = min(w, cache_len)
+            cache = attn.ring_prefill_cache(
+                full_cache.k[:, :, : x.shape[1]],
+                full_cache.v[:, :, : x.shape[1]],
+                x.shape[1],
+                ring_w,
+            )
+        x = x + out
+    elif bt == "mlstm":
+        x, cache = ssm.mlstm_block(p["mixer"], x, cfg, return_state=True)
+    elif bt == "slstm":
+        x, cache = ssm.slstm_block(p["mixer"], x, cfg, return_state=True)
+    elif bt == "rglru":
+        x, cache = rglru.rglru_block(p["mixer"], x, cfg, return_state=True)
+    x, _ = _apply_mlp(p, x, cfg, parallel)
+    return x, cache
+
+
+def apply_block_decode(bt, p, x, cache, pos, cfg, parallel):
+    if bt in ATTN_TYPES:
+        xin = layers.rmsnorm(x, p["norm1"])
+        if bt == "attn":
+            out, cache = attn.attention(
+                p["attn"], xin, cfg, pos.reshape(-1, 1), causal=True,
+                cache=cache, cache_pos=pos,
+            )
+        else:
+            w = block_window(cfg, bt)
+            out, cache = attn.ring_decode_attention(p["attn"], xin, cfg, cache, pos, w)
+        x = x + out
+    elif bt == "mlstm":
+        x, cache = ssm.mlstm_decode_step(p["mixer"], x, cfg, cache)
+    elif bt == "slstm":
+        x, cache = ssm.slstm_decode_step(p["mixer"], x, cfg, cache)
+    elif bt == "rglru":
+        x, cache = rglru.rglru_decode_step(p["mixer"], x, cfg, cache)
+    x, _ = _apply_mlp(p, x, cfg, parallel)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# model-level forward passes
+# ---------------------------------------------------------------------------
+def _embed(params, tokens, cfg: ArchConfig, parallel=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    if parallel is not None:
+        x = parallel.shard_act(x, seq_dim=_act_seq_dim(cfg))
+    return x
+
+
+def _head(params, x, cfg: ArchConfig):
+    xf = layers.rmsnorm(x, params["final_norm"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.dot(xf, w.astype(xf.dtype))
+
+
+def forward_train(
+    params,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    parallel: Optional[ParallelConfig] = None,
+    prefix_emb: Optional[jax.Array] = None,
+):
+    """Full teacher-forced pass.  tokens (B, S+1) → (logits (B,S,V), aux)."""
+    inputs, _ = tokens[:, :-1], tokens[:, 1:]
+    x = _embed(params, inputs, cfg, parallel)
+    p_len = 0
+    if prefix_emb is not None:  # VLM: precomputed patch embeddings (stub)
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+        p_len = prefix_emb.shape[1]
+        if parallel is not None:
+            x = parallel.shard_act(x)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    remat = parallel.remat if parallel is not None else True
+
+    def period_step(carry, pp):
+        x, aux = carry
+        for j, bt in enumerate(cfg.block_pattern):
+            x, a = apply_block_train(bt, pp[f"b{j}"], x, positions, cfg, parallel)
+            if parallel is not None:
+                # keep batch-DP through the scan (seq-dim SP when legal)
+                x = parallel.shard_act(x, seq_dim=_act_seq_dim(cfg))
+            aux = aux + a
+        return (x, aux), None
+
+    fn = jax.checkpoint(period_step) if remat else period_step
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    if p_len:
+        x = x[:, p_len:]
+    logits = _head(params, x, cfg)
+    return logits, aux / cfg.num_layers
+
+
+def loss_fn(
+    params,
+    batch: dict,
+    cfg: ArchConfig,
+    parallel: Optional[ParallelConfig] = None,
+    aux_coef: float = 0.01,
+):
+    """Next-token CE (+ MoE load-balance aux).  Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    prefix = batch.get("patch_emb")
+    logits, aux = forward_train(params, tokens, cfg, parallel, prefix_emb=prefix)
+    labels = tokens[:, 1:]
+    ce = layers.softmax_cross_entropy_logits(logits, labels)
+    loss = ce + aux_coef * aux
+    return loss, {"loss": loss, "ce": ce, "moe_aux": aux}
+
+
+def prefill(
+    params,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    parallel: Optional[ParallelConfig] = None,
+    cache_len: Optional[int] = None,
+    prefix_emb: Optional[jax.Array] = None,
+):
+    """Process the prompt, return (last-token logits, caches).
+
+    ``cache_len`` sizes the decode KV caches (≥ prompt length).
+    """
+    x = _embed(params, tokens, cfg, parallel)
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+        if parallel is not None:
+            x = parallel.shard_act(x)
+    b, s, _ = x.shape
+    # the cache must cover the whole processed prompt (incl. any VLM prefix)
+    cache_len = max(cache_len or s, s)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def period_step(x, pp):
+        caches = {}
+        for j, bt in enumerate(cfg.block_pattern):
+            x, c = apply_block_prefill(
+                bt, pp[f"b{j}"], x, positions, cfg, parallel, cache_len
+            )
+            if parallel is not None:
+                x = parallel.shard_act(x, seq_dim=_act_seq_dim(cfg))
+            caches[f"b{j}"] = c
+        return x, caches
+
+    x, caches = jax.lax.scan(period_step, x, params["layers"])
+    logits = _head(params, x[:, -1:], cfg)[:, 0]
+    return logits, caches
+
+
+def decode_step(
+    params,
+    caches,
+    token: jax.Array,  # (B, 1) int32
+    pos: jax.Array,  # (B,) absolute position of `token`
+    cfg: ArchConfig,
+    parallel: Optional[ParallelConfig] = None,
+):
+    """One decode step: returns (logits (B,V), new caches)."""
+    x = _embed(params, token, cfg, parallel)
+
+    def period_step(x, pc):
+        pp, cc = pc
+        new = {}
+        for j, bt in enumerate(cfg.block_pattern):
+            x, c2 = apply_block_decode(
+                bt, pp[f"b{j}"], x, cc[f"b{j}"], pos, cfg, parallel
+            )
+            if parallel is not None:
+                x = parallel.shard_act(x, seq_dim=None)
+            new[f"b{j}"] = c2
+        return x, new
+
+    x, new_caches = jax.lax.scan(period_step, x, (params["layers"], caches))
+    logits = _head(params, x, cfg)[:, 0]
+    return logits, new_caches

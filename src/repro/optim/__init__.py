@@ -1,0 +1,23 @@
+"""Optimizer substrate: AdamW, LR schedules, clipping, grad compression."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine, warmup_linear
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.compress import (
+    quantize_int8,
+    dequantize_int8,
+    error_feedback_compress,
+    compressed_psum_int8,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "warmup_cosine",
+    "warmup_linear",
+    "clip_by_global_norm",
+    "quantize_int8",
+    "dequantize_int8",
+    "error_feedback_compress",
+    "compressed_psum_int8",
+]

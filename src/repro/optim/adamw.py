@@ -1,0 +1,64 @@
+"""AdamW with decoupled weight decay and optional reduced-precision moments.
+
+State is a pytree mirroring params (ZeRO-3: it inherits the params'
+sharding specs — see ``repro.distributed.sharding.param_pspecs``).  For the
+405B-class archs the moments default to bf16, halving optimizer HBM; the
+update still runs in f32 (moments are upcast, updated, recast).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"  # "bfloat16" halves optimizer HBM
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: dict,
+    lr: jax.Array,
+    cfg: AdamWConfig,
+) -> tuple[Any, dict]:
+    """One AdamW step. ``lr`` is a traced scalar (schedules stay jittable)."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - jnp.power(cfg.b1, t)
+    c2 = 1.0 - jnp.power(cfg.b2, t)
+    dt = jnp.dtype(cfg.moment_dtype)
+
+    def leaf(p, g, m, v):
+        g = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * cfg.b1 + (1.0 - cfg.b1) * g
+        vf = v.astype(jnp.float32) * cfg.b2 + (1.0 - cfg.b2) * jnp.square(g)
+        update = (mf / c1) / (jnp.sqrt(vf / c2) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (update + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mf.astype(dt), vf.astype(dt)
+
+    out = jax.tree.map(leaf, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": step, "m": new_m, "v": new_v}

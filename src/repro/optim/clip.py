@@ -1,0 +1,17 @@
+"""Global-norm gradient clipping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_global_norm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Scale ``grads`` so their global L2 norm is at most ``max_norm``.
+
+    Returns ``(clipped_grads, pre_clip_norm)``.
+    """
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm

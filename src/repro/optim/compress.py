@@ -1,0 +1,115 @@
+"""Int8 gradient compression with error feedback (DP all-reduce path).
+
+The compressed all-reduce follows the standard two-hop scheme (1-bit
+Adam / DeepSpeed lineage, adapted to int8):
+
+1. quantize the local gradient shard to int8 with a per-chunk f32 scale,
+2. **reduce-scatter in int8**: all-to-all the chunks so device ``d`` holds
+   chunk ``d`` from every peer, dequantize + sum locally in f32,
+3. requantize the reduced chunk and **all-gather in int8**.
+
+Both wire hops move int8 payloads (scales are 1 f32 per chunk), so the
+collective bytes drop ~4× vs an f32 ring all-reduce — visible in the HLO
+the dry-run parses for the roofline's collective term.
+
+Error feedback: the quantization residual is added back into the next
+step's gradient (``error_feedback_compress``), which keeps SGD/Adam
+convergence unbiased in expectation — state rides in the optimizer pytree.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_compress(
+    grads: Any, error: Any
+) -> tuple[Any, Any]:
+    """Quantize ``grads + error`` per leaf; return (dequantized, new_error).
+
+    The returned gradient is what the optimizer consumes; ``new_error`` is
+    the residual to carry into the next step.  Pure local transform — used
+    standalone in tests and composed with :func:`compressed_psum_int8` in
+    the trainer's manual-collective path.
+    """
+
+    def leaf(g, e):
+        gf = g.astype(jnp.float32) + e.astype(jnp.float32)
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), (gf - deq).astype(e.dtype)
+
+    out = jax.tree.map(leaf, grads, error)
+    deq = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err
+
+
+def compressed_psum_int8(
+    x: jax.Array, axis_names: Sequence[str]
+) -> jax.Array:
+    """Mean-reduce ``x`` across ``axis_names`` with int8 wire traffic.
+
+    Must run inside ``shard_map``.  ``x`` is the per-device value (e.g. a
+    flattened gradient shard); every device returns the full mean.
+
+    reduce-scatter hop: reshape to (D, chunk) → per-chunk int8 quantize →
+    ``all_to_all`` (int8) + ``all_gather`` of scales (f32, D floats) →
+    dequantize + sum.  all-gather hop: requantize the summed chunk →
+    ``all_gather`` (int8) + scale exchange → dequantize.
+    """
+    d = 1
+    for a in axis_names:
+        d *= jax.lax.axis_size(a)
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % d
+    chunks = jnp.pad(flat, (0, pad)).reshape(d, -1)
+
+    # per-destination-chunk int8 quantization
+    amax = jnp.maximum(jnp.max(jnp.abs(chunks), axis=1), 1e-12)
+    scales = amax / 127.0
+    q = jnp.clip(jnp.round(chunks / scales[:, None]), -127, 127).astype(jnp.int8)
+
+    # hop 1 (reduce-scatter): all-to-all int8 payload + f32 scale all-gather.
+    sizes = [jax.lax.axis_size(a) for a in axis_names]
+    qq = q.reshape(*sizes, -1)
+    for i, a in enumerate(axis_names):
+        qq = jax.lax.all_to_all(qq, a, split_axis=i, concat_axis=i, tiled=True)
+    q_recv = qq.reshape(d, -1)  # row = source device, my chunk id
+    s_all = scales
+    for a in axis_names:
+        s_all = jax.lax.all_gather(s_all, a, tiled=True)
+    s_all = s_all.reshape(d, d)  # [source, chunk]
+    rank = jnp.int32(0)
+    for a in axis_names:
+        rank = rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    my_scales = jnp.take(s_all, rank, axis=1)  # (D,) scale of my chunk per src
+    reduced = jnp.sum(q_recv.astype(jnp.float32) * my_scales[:, None], axis=0) / d
+
+    # hop 2: requantize the reduced chunk + all-gather int8.
+    amax2 = jnp.maximum(jnp.max(jnp.abs(reduced)), 1e-12)
+    s2 = amax2 / 127.0
+    q2 = jnp.clip(jnp.round(reduced / s2), -127, 127).astype(jnp.int8)
+    qg, sg = q2, s2.reshape(1)
+    for a in axis_names:
+        qg = jax.lax.all_gather(qg, a, tiled=True)
+        sg = jax.lax.all_gather(sg, a, tiled=True)
+    out = qg.reshape(d, -1).astype(jnp.float32) * sg.reshape(d, 1)
+    return out.reshape(-1)[:n].reshape(shape).astype(x.dtype)

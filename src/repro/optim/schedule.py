@@ -1,0 +1,25 @@
+"""Jittable learning-rate schedules (step → scalar lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_linear(step, *, peak_lr: float, warmup_steps: int, total_steps: int):
+    """Linear warmup then linear decay to zero."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = s / max(1, warmup_steps)
+    decay = (total_steps - s) / max(1, total_steps - warmup_steps)
+    return peak_lr * jnp.clip(jnp.minimum(warm, decay), 0.0, 1.0)
+
+
+def warmup_cosine(
+    step, *, peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1
+):
+    """Linear warmup then cosine decay to ``floor * peak_lr``."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.clip(s / max(1, warmup_steps), 0.0, 1.0)
+    frac = jnp.clip(
+        (s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+    )
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return peak_lr * jnp.where(s < warmup_steps, warm, cos)

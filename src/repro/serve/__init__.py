@@ -1,0 +1,11 @@
+"""Serving layer: sharded KV-cache steps and a continuous batcher."""
+from repro.serve.engine import make_prefill_step, make_serve_step, ServeMesh
+from repro.serve.batcher import ContinuousBatcher, Request
+
+__all__ = [
+    "make_prefill_step",
+    "make_serve_step",
+    "ServeMesh",
+    "ContinuousBatcher",
+    "Request",
+]

@@ -1,0 +1,126 @@
+"""Continuous batching over a fixed slot grid.
+
+The engine keeps ``num_slots`` decode lanes hot; finished/empty lanes are
+refilled from the request queue between decode steps (prefill writes the
+new sequence's KV into the lane's cache region).  All jitted shapes are
+static — admission is pure host-side bookkeeping, the standard
+continuous-batching design (vLLM-style, minus paging: lanes own fixed
+cache windows).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new_tokens: int
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Drives (prefill_fn, decode_fn) over a slot grid.
+
+    ``prefill_fn(params, tokens (1, L)) -> (logits (1, V), caches_for_one)``
+    ``decode_fn(params, caches, token (B,1), pos (B,)) -> (logits, caches)``
+
+    The batcher owns the batched cache pytree; per-slot prefill caches are
+    scattered into slot ``i`` with ``lax.dynamic_update_index_in_dim``.
+    """
+
+    def __init__(
+        self,
+        params,
+        init_caches,  # batched cache pytree for num_slots lanes
+        prefill_fn: Callable,
+        decode_fn: Callable,
+        num_slots: int,
+        eos_id: int = -1,
+        greedy: bool = True,
+    ):
+        self.params = params
+        self.caches = init_caches
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.num_slots = num_slots
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * num_slots
+        self.pos = np.zeros((num_slots,), np.int32)
+        self.next_token = np.zeros((num_slots,), np.int32)
+        self.completed: list[Request] = []
+
+    # -- admission ---------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.num_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                logits, one_cache = self.prefill_fn(
+                    self.params, {"tokens": jnp.asarray(req.prompt[None, :])}
+                )
+                tok = int(jnp.argmax(logits[-1] if logits.ndim == 1 else logits[0]))
+                req.out_tokens.append(tok)
+                self.caches = _write_slot(self.caches, one_cache, i)
+                self.slots[i] = req
+                self.pos[i] = len(req.prompt)
+                self.next_token[i] = tok
+
+    # -- decode loop --------------------------------------------------------------
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def step(self) -> None:
+        """Admit, then decode one token for every live lane."""
+        self._admit()
+        if self.active() == 0:
+            return
+        token = jnp.asarray(self.next_token[:, None])
+        pos = jnp.asarray(self.pos)
+        logits, self.caches = self.decode_fn(self.params, self.caches, token, pos)
+        new = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(new[i])
+            req.out_tokens.append(tok)
+            self.pos[i] += 1
+            self.next_token[i] = tok
+            if tok == self.eos_id or len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.completed.append(req)
+                self.slots[i] = None
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or self.active()) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.completed
+
+
+def _write_slot(batched_caches, one_cache, slot: int):
+    """Scatter a single-sequence cache pytree into slot ``slot``.
+
+    Cache leaves are scanned stacks ``(num_periods, B, ...)`` — the batch
+    dim is axis 1.
+    """
+
+    def f(dst, src):
+        if dst.ndim < 2:
+            return dst
+        return jax.lax.dynamic_update_index_in_dim(dst, src[:, 0], slot, axis=1)
+
+    return jax.tree.map(f, batched_caches, one_cache)

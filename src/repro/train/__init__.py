@@ -1,0 +1,11 @@
+"""Training layer: jitted train step, trainer loop, pipeline parallelism."""
+from repro.train.step import TrainStepConfig, make_train_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "TrainStepConfig",
+    "make_train_state",
+    "make_train_step",
+    "Trainer",
+    "TrainerConfig",
+]

@@ -1,0 +1,89 @@
+"""Manual data-parallel train step with int8-compressed gradient all-reduce.
+
+Unlike the GSPMD path (``repro.train.step``) where XLA inserts the gradient
+reduce-scatters, this path runs the whole step inside ``shard_map`` over
+the dp axes and performs the gradient all-reduce explicitly through
+``repro.optim.compress.compressed_psum_int8`` — the int8 payload is
+visible as ``s8`` all-to-all/all-gather collectives in the HLO (~4× fewer
+wire bytes than an f32 ring all-reduce).  Error feedback is carried per
+device in ``opt_state["ef_error"]``.
+
+Params and optimizer state are replicated (classic DP); the GSPMD path
+covers FSDP/TP.  This is the configuration the paper's "communication
+primitives that are prohibitive in distributed settings" argument maps to:
+dense all-to-alls on a fast fabric beat sparse parameter-server schemes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.models.api import ModelBundle
+from repro.optim import adamw_update, clip_by_global_norm
+from repro.optim.compress import compressed_psum_int8, quantize_int8, dequantize_int8
+from repro.train.step import TrainStepConfig
+
+
+def make_manual_dp_train_step(bundle: ModelBundle, tcfg: TrainStepConfig):
+    parallel = bundle.parallel
+    assert parallel is not None and parallel.mesh is not None
+    dp_axes = parallel.dp_axes
+    compress = parallel.grad_compression
+
+    def body(params, opt_state, local_batch):
+        def loss_fn(p):
+            return bundle.loss(p, local_batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        ef = opt_state.get("ef_error")
+
+        def reduce_leaf(g, e):
+            gf = g.astype(jnp.float32)
+            if compress:
+                gf = gf + e.astype(jnp.float32)
+                q, s = quantize_int8(gf)
+                sent = dequantize_int8(q, s)
+                new_e = (gf - sent).astype(e.dtype)
+                total = compressed_psum_int8(sent, dp_axes)
+            else:
+                new_e = e
+                total = jax.lax.pmean(gf, dp_axes)
+            return total.astype(g.dtype), new_e
+
+        if ef is None:
+            ef = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.bfloat16), grads)
+        out = jax.tree.map(reduce_leaf, grads, ef)
+        grads = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = tcfg.lr_at(opt_state["step"] + 1)  # schedule counts from 1
+        new_params, new_opt = adamw_update(
+            params,
+            grads,
+            {k: opt_state[k] for k in ("step", "m", "v")},
+            lr,
+            tcfg.adamw,
+        )
+        new_opt["ef_error"] = new_ef
+        metrics = {k: jax.lax.pmean(v.astype(jnp.float32), dp_axes)
+                   for k, v in metrics.items()}
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_params, new_opt, metrics
+
+    def step(params, opt_state, batch):
+        return shard_map(
+            body,
+            mesh=parallel.mesh,
+            in_specs=(P(), P(), P(dp_axes)),
+            out_specs=(P(), P(), P()),
+            check_vma=False,
+        )(params, opt_state, batch)
+
+    return step

@@ -1,0 +1,172 @@
+"""GPipe-style pipeline parallelism over a mesh axis (dense archs).
+
+The scanned layer stack ``params["layers"]`` (leading dim = num_periods)
+is split across the ``stage`` axis: each stage owns ``num_periods/S``
+contiguous periods.  A step runs ``M + S - 1`` pipeline ticks; at tick
+``t`` stage ``s`` processes microbatch ``t - s``, then hands its
+activation to stage ``s+1`` with a ``ppermute`` — the JAX-native
+equivalent of the paper's point-to-point NVLink hops, with autodiff
+producing the reversed (backward) schedule through the same permutes.
+
+Scope: decoder-only dense archs (no MoE-in-PP — MoE uses EP via the
+paper's exchange instead).  Embedding and head weights are replicated;
+their gradient contributions are psum'd over the stage axis.  The bubble
+fraction is the textbook ``(S-1)/(M+S-1)``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as tfm
+from repro.models.api import ModelBundle
+from repro.optim import adamw_update, clip_by_global_norm
+from repro.train.step import TrainStepConfig
+
+
+def pipeline_param_specs(stage_axis: str):
+    """in_specs pytree hint: layer stack sharded on the stage axis."""
+
+    def spec_for(path_key: str):
+        return P(stage_axis) if path_key == "layers" else P()
+
+    return spec_for
+
+
+def _run_local_periods(local_layers, x, positions, cfg: ArchConfig):
+    def period_step(x, pp):
+        for j, bt in enumerate(cfg.block_pattern):
+            x, _ = tfm.apply_block_train(bt, pp[f"b{j}"], x, positions, cfg, None)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(period_step), x, local_layers)
+    return x
+
+
+def make_pp_train_step(
+    bundle: ModelBundle,
+    tcfg: TrainStepConfig,
+    *,
+    stage_axis: str = "stage",
+    num_microbatches: int = 4,
+):
+    cfg = bundle.cfg
+    parallel = bundle.parallel
+    assert parallel is not None and parallel.mesh is not None
+    assert not cfg.is_moe, "PP path covers dense archs; MoE uses EP"
+    mesh = parallel.mesh
+    s_stages = mesh.shape[stage_axis]
+    assert cfg.num_periods % s_stages == 0, (
+        f"{cfg.num_periods} periods not divisible by {s_stages} stages"
+    )
+    m = num_microbatches
+
+    def pipelined_loss(params, tokens):
+        """Inside shard_map: params['layers'] is the LOCAL period slice."""
+        stage = jax.lax.axis_index(stage_axis)
+        b, sp1 = tokens.shape
+        assert b % m == 0, f"batch {b} % microbatches {m}"
+        mb = b // m
+        toks = tokens.reshape(m, mb, sp1)
+        seq = sp1 - 1
+        positions = jnp.broadcast_to(
+            jnp.arange(seq, dtype=jnp.int32), (mb, seq)
+        )
+        dt = jnp.dtype(cfg.dtype)
+        ticks = m + s_stages - 1
+        perm = [(i, i + 1) for i in range(s_stages - 1)]
+
+        def tick(carry, t):
+            x_in, loss_acc, cnt = carry
+            # stage 0 ingests microbatch t (zeros during drain ticks)
+            idx0 = jnp.clip(t, 0, m - 1)
+            tok0 = jax.lax.dynamic_index_in_dim(toks, idx0, 0, keepdims=False)
+            x0 = tfm._embed(params, tok0[:, :-1], cfg)
+            x = jnp.where(stage == 0, x0, x_in.astype(dt))
+            y = _run_local_periods(params["layers"], x, positions, cfg)
+            # last stage emits loss for microbatch t - (S-1)
+            idx_l = t - (s_stages - 1)
+            tok_l = jax.lax.dynamic_index_in_dim(
+                toks, jnp.clip(idx_l, 0, m - 1), 0, keepdims=False
+            )
+            logits = tfm._head(params, y, cfg)
+            ce = L.softmax_cross_entropy_logits(logits, tok_l[:, 1:])
+            valid = (
+                (idx_l >= 0) & (idx_l < m) & (stage == s_stages - 1)
+            ).astype(jnp.float32)
+            x_next = jax.lax.ppermute(y.astype(jnp.float32), stage_axis, perm)
+            return (x_next, loss_acc + ce * valid, cnt + valid), None
+
+        x0 = jnp.zeros((mb, seq, cfg.d_model), jnp.float32)
+        (_, loss_acc, cnt), _ = jax.lax.scan(
+            tick, (x0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            jnp.arange(ticks),
+        )
+        # loss lives on the last stage; share it with everyone.
+        total = jax.lax.psum(loss_acc, stage_axis)
+        n = jax.lax.psum(cnt, stage_axis)
+        return total / jnp.maximum(n, 1.0)
+
+    def body(params, opt_state, tokens):
+        loss, grads = jax.value_and_grad(pipelined_loss)(params, tokens)
+        # layer grads are local to the stage; replicated leaves (embed,
+        # head, final_norm) accumulate across stages.
+        grads = {
+            k: (v if k == "layers" else jax.tree.map(
+                lambda g: jax.lax.psum(g, stage_axis), v))
+            for k, v in grads.items()
+        }
+        grads, gnorm_local = clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = tcfg.lr_at(opt_state["step"] + 1)  # schedule counts from 1
+        new_params, new_opt = adamw_update(
+            params,
+            grads,
+            {k: opt_state[k] for k in ("step", "m", "v")},
+            lr,
+            tcfg.adamw,
+        )
+        metrics = {
+            "loss": loss,
+            "ce": loss,
+            "moe_aux": jnp.zeros((), jnp.float32),
+            "grad_norm": gnorm_local,
+            "lr": lr,
+        }
+        return new_params, new_opt, metrics
+
+    def tree_specs(tree, layer_spec_dim0: bool):
+        def leaf_spec(leaf):
+            nd = getattr(leaf, "ndim", None)
+            if nd is None:
+                nd = len(leaf.shape)
+            return P(stage_axis, *([None] * (nd - 1)))
+
+        return jax.tree.map(leaf_spec, tree)
+
+    def step(params, opt_state, batch):
+        pspecs = {
+            k: (tree_specs(v, True) if k == "layers" else jax.tree.map(lambda _: P(), v))
+            for k, v in params.items()
+        }
+        ospecs = {
+            "step": P(),
+            "m": {k: (tree_specs(v, True) if k == "layers" else jax.tree.map(lambda _: P(), v))
+                  for k, v in opt_state["m"].items()},
+            "v": {k: (tree_specs(v, True) if k == "layers" else jax.tree.map(lambda _: P(), v))
+                  for k, v in opt_state["v"].items()},
+        }
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(pspecs, ospecs, P()),
+            out_specs=(pspecs, ospecs, P()),
+            check_vma=False,
+        )(params, opt_state, batch["tokens"])
+
+    return step

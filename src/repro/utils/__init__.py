@@ -1,0 +1,13 @@
+"""Small shared helpers used across the framework."""
+from repro.utils.numerics import cdiv, next_multiple, bytes_of, human_bytes
+from repro.utils.treeutil import tree_size_bytes, tree_param_count, tree_global_norm
+
+__all__ = [
+    "cdiv",
+    "next_multiple",
+    "bytes_of",
+    "human_bytes",
+    "tree_size_bytes",
+    "tree_param_count",
+    "tree_global_norm",
+]

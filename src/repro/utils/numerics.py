@@ -1,0 +1,52 @@
+"""Integer/shape arithmetic helpers."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division for non-negative python ints."""
+    if b <= 0:
+        raise ValueError(f"cdiv divisor must be positive, got {b}")
+    return -(-a // b)
+
+
+def next_multiple(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return cdiv(x, m) * m
+
+
+_DTYPE_BYTES = {
+    "float32": 4,
+    "bfloat16": 2,
+    "float16": 2,
+    "int32": 4,
+    "uint32": 4,
+    "int8": 1,
+    "uint8": 1,
+    "bool": 1,
+    "int64": 8,
+    "uint64": 8,
+    "float64": 8,
+}
+
+
+def bytes_of(shape, dtype) -> int:
+    """Bytes of an array with ``shape`` and ``dtype`` (dtype may be str or np dtype)."""
+    name = np.dtype(dtype).name if not isinstance(dtype, str) else dtype
+    nbytes = _DTYPE_BYTES.get(name)
+    if nbytes is None:
+        nbytes = np.dtype(name).itemsize
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * nbytes
+
+
+def human_bytes(n: float) -> str:
+    """Pretty-print a byte count."""
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}EiB"

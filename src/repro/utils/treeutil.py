@@ -1,0 +1,31 @@
+"""Pytree helpers (param counting, norms, sizes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    """Total number of elements across all leaves (works on ShapeDtypeStructs too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(int(np.prod(l.shape)) if l.shape else 1 for l in leaves))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes across leaves (works on ShapeDtypeStructs too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        total += n * np.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_global_norm(tree) -> jax.Array:
+    """Global L2 norm over all leaves of a pytree of arrays."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    return jnp.sqrt(sq)

@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train step on CPU, asserting output shapes + finite values (assignment f)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPE_SUITE, get_config, get_smoke_config
+from repro.distributed.parallel import single_device_parallel
+from repro.models.api import build_model
+from repro.train.step import TrainStepConfig, make_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, b=B, s=S):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(1, cfg.vocab_size, size=(b, s + 1), dtype=np.int32)
+        )
+    }
+    if cfg.frontend == "patch_stub":
+        batch["patch_emb"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_len, cfg.d_model)), jnp.bfloat16
+        )
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_len, cfg.d_model)), jnp.bfloat16
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    cfg.validate()
+    # spot-check the assignment numbers are encoded exactly
+    expect = {
+        "granite_20b": (52, 6144, 48, 1, 24576, 49152),
+        "qwen3_4b": (36, 2560, 32, 8, 9728, 151936),
+        "llama3_405b": (126, 16384, 128, 8, 53248, 128256),
+        "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+        "grok_1_314b": (64, 6144, 48, 8, 32768, 131072),
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "xlstm_1_3b": (48, 2048, 4, 4, 0, 50304),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "pixtral_12b": (40, 5120, 32, 8, 14336, 131072),
+        "whisper_base": (6, 512, 8, 8, 2048, 51865),
+    }[arch]
+    got = (
+        cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+        cfg.d_ff, cfg.vocab_size,
+    )
+    assert got == expect, f"{arch}: {got} != {expect}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    bundle = build_model(cfg, single_device_parallel())
+    batch = _batch(cfg)
+    params, opt = make_train_state(bundle, TrainStepConfig(), jax.random.key(0))
+    loss, metrics = jax.jit(bundle.loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch} loss is not finite"
+
+    step = jax.jit(make_train_step(bundle, TrainStepConfig()))
+    p2, o2, m2 = step(params, opt, batch)
+    assert np.isfinite(float(m2["loss"]))
+    assert np.isfinite(float(m2["grad_norm"]))
+    assert int(o2["step"]) == 1
+    # params actually changed (some leaf moved)
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert moved, f"{arch}: no parameter moved after one step"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    bundle = build_model(cfg, single_device_parallel())
+    params = bundle.init(jax.random.key(1))
+    batch = _batch(cfg, b=1, s=8)
+    cache_len = 16
+    prompt = {k: (v[:, :8] if k == "tokens" else v) for k, v in batch.items()}
+    logits, caches = jax.jit(
+        lambda p, b: bundle.prefill(p, b, cache_len=cache_len)
+    )(params, prompt)
+    assert logits.shape == (1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    # decode position: full-attn archs track absolute positions
+    pos = jnp.full((1,), 8, jnp.int32)
+    logits2, caches2 = jax.jit(bundle.decode_step)(params, caches, tok, pos)
+    assert logits2.shape == (1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_shape_suite_cells():
+    names = [c.name for c in SHAPE_SUITE]
+    assert names == ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    kinds = {c.name: c.kind for c in SHAPE_SUITE}
+    assert kinds["decode_32k"] == "decode" and kinds["long_500k"] == "decode"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long500k_eligibility(arch):
+    cfg = get_config(arch)
+    from repro.configs.base import shape_cell
+
+    ok, why = cfg.supports_cell(shape_cell("long_500k"))
+    if arch in ("xlstm_1_3b", "recurrentgemma_9b"):
+        assert ok
+    else:
+        assert not ok and "sub-quadratic" in why

@@ -1,0 +1,85 @@
+"""Checkpoint manager semantics: atomicity, async, retention, elasticity."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)), "b": jnp.zeros((4,))},
+        "opt": {"step": jnp.int32(7)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    t = _tree()
+    m.save(10, t, extra={"loader_step": 10})
+    step, got, extra = m.restore(jax.tree.map(jnp.zeros_like, t))
+    assert step == 10 and extra["loader_step"] == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_writer_and_wait(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=True)
+    for s in (1, 2, 3):
+        m.save(s, _tree(s))
+    m.wait()
+    assert m.all_steps() == [1, 2, 3]
+    m.close()
+
+
+def test_retention_keeps_newest(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for s in range(5):
+        m.save(s, _tree(s))
+    assert m.all_steps() == [3, 4]
+
+
+def test_atomic_no_tmp_dirs_after_save(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    m.save(1, _tree())
+    assert not [p for p in os.listdir(tmp_path) if p.endswith(".tmp")]
+
+
+def test_restore_latest_and_specific(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    m.save(1, _tree(1))
+    m.save(5, _tree(5))
+    like = jax.tree.map(jnp.zeros_like, _tree())
+    assert m.restore(like)[0] == 5
+    assert m.restore(like, step=1)[0] == 1
+
+
+def test_tree_mismatch_raises(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    m.save(1, _tree())
+    with pytest.raises(ValueError, match="mismatch"):
+        m.restore({"different": jnp.zeros(3)})
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    with pytest.raises(FileNotFoundError):
+        m.restore({"x": jnp.zeros(1)})
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Arrays saved from one layout restore onto explicit shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    m.save(3, t)
+    mesh = jax.make_mesh((1,), ("d",))
+    sh = {"w": NamedSharding(mesh, P("d", None))}
+    _, got, _ = m.restore(jax.tree.map(jnp.zeros_like, t), shardings=sh)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
+    assert got["w"].sharding == sh["w"]

@@ -1,0 +1,180 @@
+"""Unit + property tests for the single-device HashGraph."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashgraph, hashing
+
+
+def _np_counts(build_keys, query_keys):
+    """Oracle: multiplicity of each query key in the build multiset."""
+    from collections import Counter
+
+    c = Counter(build_keys.tolist())
+    return np.array([c[int(q)] for q in query_keys], dtype=np.int32)
+
+
+def _murmur3_32_py(key: int, seed: int) -> int:
+    """Independent pure-python port of the canonical MurmurHash3_x86_32
+    (Appleby's reference C) for a single 4-byte little-endian block."""
+    M = 0xFFFFFFFF
+
+    def rotl(x, r):
+        return ((x << r) | (x >> (32 - r))) & M
+
+    k = key & M
+    k = (k * 0xCC9E2D51) & M
+    k = rotl(k, 15)
+    k = (k * 0x1B873593) & M
+    h = seed & M
+    h ^= k
+    h = rotl(h, 13)
+    h = (h * 5 + 0xE6546B64) & M
+    h ^= 4  # length in bytes
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & M
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & M
+    h ^= h >> 16
+    return h
+
+
+@pytest.mark.parametrize("seed", [0, 0x9747B28C, 12345])
+def test_murmur_matches_reference_port(seed):
+    rng = np.random.default_rng(7)
+    ks = np.concatenate(
+        [
+            np.array([0, 1, 2, 0xDEADBEEF, 0xFFFFFFFE], dtype=np.uint32),
+            rng.integers(0, 2**32 - 1, size=64, dtype=np.uint32),
+        ]
+    )
+    out = np.asarray(hashing.murmur3_u32(jnp.asarray(ks), seed=seed))
+    golden = np.array([_murmur3_32_py(int(k), seed) for k in ks], dtype=np.uint32)
+    np.testing.assert_array_equal(out, golden)
+
+
+def test_fmix32_avalanche():
+    # The finalizer must be a bijection (injective on a sample) and mix bits.
+    x = jnp.arange(1 << 16, dtype=jnp.uint32)
+    y = np.asarray(hashing.fmix32(x))
+    assert len(np.unique(y)) == len(y)
+
+
+def test_build_offsets_are_csr():
+    keys = jnp.array([12, 3, 74, 6, 99, 3, 3], dtype=jnp.uint32)
+    hg = hashgraph.build(keys, table_size=8)
+    off = np.asarray(hg.offsets)
+    assert off[0] == 0
+    assert off[-1] == keys.shape[0]
+    assert (np.diff(off) >= 0).all()
+    # every key is stored exactly once
+    assert sorted(np.asarray(hg.keys).tolist()) == sorted(np.asarray(keys).tolist())
+
+
+def test_bucket_contents_match_hash():
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 1 << 30, size=512, dtype=np.uint32))
+    V = 128
+    hg = hashgraph.build(keys, table_size=V)
+    off = np.asarray(hg.offsets)
+    ks = np.asarray(hg.keys)
+    buckets = np.asarray(hashing.hash_to_buckets(keys, V))
+    for v in range(V):
+        stored = ks[off[v] : off[v + 1]]
+        expected = np.asarray(keys)[buckets == v]
+        assert sorted(stored.tolist()) == sorted(expected.tolist())
+
+
+@pytest.mark.parametrize("dup_factor", [1, 4, 64])
+def test_query_count_sorted_exact(dup_factor):
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, 1 << 16, size=1024 // dup_factor, dtype=np.uint32)
+    keys = jnp.asarray(np.repeat(base, dup_factor))
+    queries = jnp.asarray(rng.integers(0, 1 << 16, size=333, dtype=np.uint32))
+    hg = hashgraph.build(keys, table_size=512)
+    counts = np.asarray(hashgraph.query_count_sorted(hg, queries))
+    np.testing.assert_array_equal(counts, _np_counts(np.asarray(keys), np.asarray(queries)))
+
+
+def test_query_count_probe_matches_sorted_small_buckets():
+    rng = np.random.default_rng(2)
+    keys = jnp.asarray(rng.integers(0, 1 << 28, size=2048, dtype=np.uint32))
+    queries = keys[::3]
+    hg = hashgraph.build(keys, table_size=4096)  # C=0.5, short buckets
+    a = np.asarray(hashgraph.query_count_sorted(hg, queries))
+    b = np.asarray(hashgraph.query_count_probe(hg, queries, max_probe=64))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_lookup_first_returns_payload():
+    keys = jnp.array([10, 20, 30], dtype=jnp.uint32)
+    vals = jnp.array([100, 200, 300], dtype=jnp.int32)
+    hg = hashgraph.build(keys, table_size=16, values=vals)
+    out = np.asarray(hashgraph.lookup_first(hg, jnp.array([20, 99, 10], dtype=jnp.uint32)))
+    assert out[0] == 200
+    assert out[1] == -1
+    assert out[2] == 100
+
+
+def test_contains():
+    keys = jnp.array([5, 7, 7, 9], dtype=jnp.uint32)
+    hg = hashgraph.build(keys, table_size=8)
+    got = np.asarray(hashgraph.contains(hg, jnp.array([5, 6, 7, 8, 9], dtype=jnp.uint32)))
+    np.testing.assert_array_equal(got, [True, False, True, False, True])
+
+
+def test_trash_bucket_excluded():
+    # Padded (EMPTY) keys must never match queries.
+    keys = jnp.array([1, 2, 3, hashgraph.EMPTY_KEY], dtype=jnp.uint32)
+    V = 8
+    buckets = hashing.hash_to_buckets(keys[:3], V)
+    buckets = jnp.concatenate([buckets, jnp.array([V], jnp.int32)])
+    hg = hashgraph.build_from_buckets(keys, buckets, V)
+    assert int(hg.num_valid) == 3
+    q = jnp.array([hashgraph.EMPTY_KEY], dtype=jnp.uint32)
+    # EMPTY hashes into a real bucket but is stored only in the trash bucket.
+    assert int(hashgraph.query_count_sorted(hg, q)[0]) == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    keys=st.lists(st.integers(0, 2**32 - 2), min_size=1, max_size=300),
+    queries=st.lists(st.integers(0, 2**32 - 2), min_size=1, max_size=100),
+    logv=st.integers(1, 12),
+)
+def test_property_multiset_semantics(keys, queries, logv):
+    """HashGraph is a faithful multiset: counts match a Counter oracle."""
+    kb = np.array(keys, dtype=np.uint32)
+    qb = np.array(queries, dtype=np.uint32)
+    hg = hashgraph.build(jnp.asarray(kb), table_size=1 << logv)
+    counts = np.asarray(hashgraph.query_count_sorted(hg, jnp.asarray(qb)))
+    np.testing.assert_array_equal(counts, _np_counts(kb, qb))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    keys=st.lists(st.integers(0, 2**32 - 2), min_size=1, max_size=200),
+    logv=st.integers(1, 10),
+)
+def test_property_join_size_self(keys, logv):
+    """|A ⋈ A| = sum of squared multiplicities."""
+    kb = np.array(keys, dtype=np.uint32)
+    hg = hashgraph.build(jnp.asarray(kb), table_size=1 << logv)
+    counts = np.asarray(hashgraph.query_count_sorted(hg, jnp.asarray(kb)))
+    from collections import Counter
+
+    expected = sum(c * c for c in Counter(kb.tolist()).values())
+    assert counts.sum() == expected
+
+
+def test_build_under_jit():
+    keys = jnp.arange(100, dtype=jnp.uint32)
+
+    @jax.jit
+    def f(k):
+        hg = hashgraph.build(k, table_size=64)
+        return hashgraph.query_count_sorted(hg, k)
+
+    np.testing.assert_array_equal(np.asarray(f(keys)), np.ones(100, np.int32))

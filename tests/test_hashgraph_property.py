@@ -1,0 +1,117 @@
+"""Hypothesis property tests on the hash table's system invariants."""
+from collections import Counter
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashgraph, hashing
+
+keys_strategy = st.lists(
+    st.integers(min_value=0, max_value=2**32 - 2), min_size=1, max_size=300
+)
+
+
+def _counts_oracle(build, queries):
+    c = Counter(build)
+    return np.array([c[int(q)] for q in queries], dtype=np.int32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(build=keys_strategy, queries=keys_strategy, c_inv=st.integers(1, 4))
+def test_multiplicity_exact_any_multiset(build, queries, c_inv):
+    """query_count == multiset multiplicity for ANY input, any load factor."""
+    table_size = max(1, len(build) // c_inv)  # C in {1..4} equivalents
+    hg = hashgraph.build(jnp.asarray(np.array(build, np.uint32)), table_size)
+    got = hashgraph.query_count_sorted(hg, jnp.asarray(np.array(queries, np.uint32)))
+    np.testing.assert_array_equal(np.asarray(got), _counts_oracle(build, queries))
+
+
+@settings(max_examples=30, deadline=None)
+@given(build=keys_strategy)
+def test_offsets_monotone_and_partition(build):
+    """offsets is a monotone CSR partition of exactly the input keys."""
+    n = len(build)
+    hg = hashgraph.build(jnp.asarray(np.array(build, np.uint32)), max(1, n))
+    off = np.asarray(hg.offsets)
+    assert (np.diff(off) >= 0).all()
+    assert off[0] == 0 and off[-1] == n
+    # every key is stored exactly once, bucket contents hash to the bucket
+    assert sorted(np.asarray(hg.keys).tolist()) == sorted(
+        np.array(build, np.uint32).tolist()
+    )
+    buckets = np.asarray(hg.bucket_of(hg.keys))
+    for v in range(int(hg.table_size)):
+        seg = buckets[off[v]: off[v + 1]]
+        assert (seg == v).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(build=keys_strategy, queries=keys_strategy)
+def test_probe_and_sorted_queries_agree(build, queries):
+    """Paper-faithful linear probe == beyond-paper binary-search query."""
+    n = len(build)
+    hg = hashgraph.build(jnp.asarray(np.array(build, np.uint32)), max(1, n))
+    q = jnp.asarray(np.array(queries, np.uint32))
+    sorted_counts = hashgraph.query_count_sorted(hg, q)
+    probe_counts = hashgraph.query_count_probe(hg, q, max_probe=n + 1)
+    np.testing.assert_array_equal(np.asarray(sorted_counts), np.asarray(probe_counts))
+
+
+@settings(max_examples=30, deadline=None)
+@given(build=keys_strategy, queries=keys_strategy)
+def test_join_size_symmetric(build, queries):
+    """|A ⋈ B| = Σ_k cnt_A(k)·cnt_B(k) is symmetric in A and B."""
+    a = np.array(build, np.uint32)
+    b = np.array(queries, np.uint32)
+    hga = hashgraph.build(jnp.asarray(a), max(1, len(a)))
+    hgb = hashgraph.build(jnp.asarray(b), max(1, len(b)))
+    ab = int(np.asarray(hashgraph.query_count_sorted(hga, jnp.asarray(b))).sum())
+    ba = int(np.asarray(hashgraph.query_count_sorted(hgb, jnp.asarray(a))).sum())
+    assert ab == ba
+
+
+@settings(max_examples=30, deadline=None)
+@given(build=keys_strategy)
+def test_contains_iff_member(build):
+    a = np.array(build, np.uint32)
+    hg = hashgraph.build(jnp.asarray(a), max(1, len(a)))
+    members = jnp.asarray(a)
+    assert bool(np.asarray(hashgraph.contains(hg, members)).all())
+    # a key absent from the input is never reported present
+    absent = np.setdiff1d(
+        np.arange(50, dtype=np.uint32), a.astype(np.uint32)
+    )
+    if len(absent):
+        got = np.asarray(hashgraph.contains(hg, jnp.asarray(absent)))
+        assert not got.any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    build=keys_strategy,
+    seed1=st.integers(0, 2**31 - 1),
+    seed2=st.integers(0, 2**31 - 1),
+)
+def test_seed_changes_layout_not_semantics(build, seed1, seed2):
+    a = np.array(build, np.uint32)
+    hg1 = hashgraph.build(jnp.asarray(a), max(1, len(a)), seed=seed1)
+    hg2 = hashgraph.build(jnp.asarray(a), max(1, len(a)), seed=seed2)
+    q = jnp.asarray(a)
+    np.testing.assert_array_equal(
+        np.asarray(hashgraph.query_count_sorted(hg1, q)),
+        np.asarray(hashgraph.query_count_sorted(hg2, q)),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(words=st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=16))
+def test_stream_hash_deterministic_and_order_sensitive(words):
+    w = jnp.asarray(np.array([words], np.uint32))
+    h1 = int(hashing.murmur3_stream(w)[0])
+    h2 = int(hashing.murmur3_stream(w)[0])
+    assert h1 == h2
+    if len(words) > 1 and words[0] != words[-1]:
+        rev = jnp.asarray(np.array([words[::-1]], np.uint32))
+        assert int(hashing.murmur3_stream(rev)[0]) != h1

@@ -1,0 +1,189 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles.
+
+Sweeps shapes/dtypes per the assignment contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# murmur
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 100, 128, 1024, 5000])
+@pytest.mark.parametrize("table_size", [7, 128, 1 << 20])
+def test_murmur_kernel_matches_ref(n, table_size):
+    rng = np.random.default_rng(n)
+    keys = jnp.asarray(rng.integers(0, 2**32 - 1, size=n, dtype=np.uint32))
+    got = ops.hash_to_buckets(keys, table_size, interpret=True)
+    want = ref.hash_to_buckets_ref(keys, table_size, seed=0x9747B28C)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 0xDEADBEEF])
+def test_murmur_kernel_seeds(seed):
+    keys = jnp.arange(777, dtype=jnp.uint32)
+    got = ops.hash_to_buckets(keys, 1 << 16, seed, interpret=True)
+    want = ref.hash_to_buckets_ref(keys, 1 << 16, seed=seed)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# histogram
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,num_bins", [(100, 16), (1024, 256), (4096, 1000), (513, 300)])
+def test_histogram_kernel_matches_ref(n, num_bins):
+    rng = np.random.default_rng(n + num_bins)
+    bins = jnp.asarray(rng.integers(0, num_bins, size=n, dtype=np.int32))
+    got = ops.bin_histogram(bins, num_bins, interpret=True)
+    want = ref.histogram_ref(bins, num_bins)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(np.asarray(got).sum()) == n
+
+
+def test_histogram_skewed():
+    # all keys in one bin — the duplicate-heavy stress the paper cares about
+    bins = jnp.full((2048,), 3, jnp.int32)
+    got = ops.bin_histogram(bins, 256, interpret=True)
+    assert int(got[3]) == 2048
+    assert int(got.sum()) == 2048
+
+
+# ---------------------------------------------------------------------------
+# bucket probe
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,v,dup", [(512, 256, 1), (1024, 128, 4), (300, 64, 16)])
+def test_bucket_probe_matches_ref(n, v, dup):
+    from repro.core import hashgraph
+
+    rng = np.random.default_rng(v)
+    base = rng.integers(0, 1 << 24, size=max(1, n // dup), dtype=np.uint32)
+    keys = jnp.asarray(np.repeat(base, dup)[:n])
+    hg = hashgraph.build(keys, table_size=v)
+    queries = jnp.asarray(
+        np.concatenate([base[:32], rng.integers(0, 1 << 24, size=32, dtype=np.uint32)])
+    )
+    b = hg.bucket_of(queries)
+    starts, ends = hg.offsets[b], hg.offsets[b + 1]
+    max_probe = 4 * dup + 8
+    got = ops.bucket_probe(
+        hg.keys, starts, ends, queries, max_probe=max_probe, interpret=True
+    )
+    want = ref.bucket_probe_ref(starts, ends, queries, hg.keys, max_probe)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+ATTN_CASES = [
+    # (b, hq, hkv, sq, skv, d, causal, window)
+    (1, 2, 2, 128, 128, 64, True, None),
+    (2, 4, 2, 128, 128, 64, True, None),  # GQA 2:1
+    (1, 4, 1, 256, 256, 32, True, None),  # GQA 4:1 (MQA)
+    (1, 2, 2, 128, 128, 64, False, None),  # encoder (full)
+    (1, 2, 2, 256, 256, 32, True, 64),  # sliding window
+    (1, 2, 1, 1, 384, 64, True, None),  # decode: 1 query vs long cache
+    (1, 2, 2, 100, 100, 64, True, None),  # ragged seq (pad inside kernel)
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    b, hq, hkv, sq, skv, d, causal, window = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    q = jnp.asarray(rng.standard_normal((b, hq, sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, skv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, skv, d)), dtype)
+    got = ops.flash_attention(
+        q, k, v, causal=causal, window=window, block_q=64, block_kv=64, interpret=True
+    )
+    group = hq // hkv
+    want = jnp.stack(
+        [
+            ref.attention_ref(
+                q[i], k[i], v[i], causal=causal, window=window, q_heads_per_kv=group
+            )
+            for i in range(b)
+        ]
+    )
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_matches_ref_long_decode():
+    # decode against 4k cache — exercises many kv blocks + accumulator carry
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 2, 1, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 4096, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 4096, 64)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention_ref(q[0], k[0], v[0], causal=True)[None]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM recurrence (VMEM-pinned recurrent weights)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,h,s,hd,t_block",
+    [(1, 1, 8, 16, 8), (2, 2, 32, 32, 16), (1, 4, 100, 64, 32), (2, 1, 256, 128, 256)],
+)
+def test_slstm_kernel_matches_ref(b, h, s, hd, t_block):
+    rng = np.random.default_rng(b * 1000 + s)
+    pre = jnp.asarray(rng.standard_normal((b, h, s, 4, hd)) * 0.5, jnp.float32)
+    r = jnp.asarray(rng.standard_normal((h, 4, hd, hd)) / np.sqrt(hd), jnp.float32)
+    z = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h, hd), -1e30, jnp.float32)
+    got_hs, got_fin = ops.slstm_recurrence(
+        pre, r, z, z, z, m0, t_block=t_block, interpret=True
+    )
+    want_hs, want_fin = ref.slstm_sequence_ref(pre, r, z, z, z, m0)
+    np.testing.assert_allclose(
+        np.asarray(got_hs), np.asarray(want_hs), rtol=2e-5, atol=2e-5
+    )
+    for g, w in zip(got_fin, want_fin):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-5, atol=2e-5)
+
+
+def test_slstm_kernel_matches_model_block():
+    """Kernel path == repro.models.ssm.slstm_block (the production oracle)."""
+    import dataclasses
+
+    from repro.configs.base import get_smoke_config
+    from repro.models import ssm
+
+    cfg = dataclasses.replace(get_smoke_config("xlstm_1_3b"), dtype="float32")
+    params = ssm.init_slstm(jax.random.key(0), cfg)
+    rng = np.random.default_rng(3)
+    b, s, d = 2, 24, cfg.d_model
+    x = jnp.asarray(rng.standard_normal((b, s, d)) * 0.1, jnp.float32)
+    want, _ = ssm.slstm_block(params, x, cfg)
+
+    # reproduce the block wiring around the kernel
+    h_heads = cfg.num_heads
+    hd = d // h_heads
+    xin = jnp.asarray(
+        np.asarray(
+            __import__("repro.models.layers", fromlist=["rmsnorm"]).rmsnorm(
+                x, params["norm"]
+            )
+        )
+    )
+    pre = (jnp.dot(xin, params["w_in"]) + params["b"]).astype(jnp.float32)
+    pre = pre.reshape(b, s, 4, h_heads, hd).transpose(0, 3, 1, 2, 4)
+    z = jnp.zeros((b, h_heads, hd), jnp.float32)
+    m0 = jnp.full((b, h_heads, hd), -1e30, jnp.float32)
+    hs, _ = ops.slstm_recurrence(pre, params["r"], z, z, z, m0, t_block=8, interpret=True)
+    hs = hs.transpose(0, 2, 1, 3).reshape(b, s, d)
+    from repro.models import layers as L
+
+    hs = L.rmsnorm(hs, params["out_norm"])
+    got = x + jnp.dot(hs, params["w_down"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)

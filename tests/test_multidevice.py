@@ -1,0 +1,52 @@
+"""Multi-device semantics tests.
+
+These run in subprocesses with ``--xla_force_host_platform_device_count=8``
+so the main pytest process keeps the default single CPU device (the
+assignment requires fake devices only where needed).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SCRIPTS = Path(__file__).resolve().parent / "multidevice"
+
+
+def run_script(name: str, devices: int = 8, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPTS / name)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+        cwd=str(REPO),
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{name} failed (rc={proc.returncode})\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+        )
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_multidevice_hashtable():
+    out = run_script("run_hashtable_checks.py")
+    assert "ALL_OK" in out
+
+
+@pytest.mark.slow
+def test_multidevice_training():
+    out = run_script("run_train_checks.py")
+    assert "ALL_OK" in out
+
+
+@pytest.mark.slow
+def test_multidevice_parallel_semantics():
+    out = run_script("run_parallel_semantics.py")
+    assert "ALL_OK" in out

@@ -1,0 +1,132 @@
+"""Optimizer substrate tests: AdamW, schedules, clip, int8 compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    dequantize_int8,
+    error_feedback_compress,
+    quantize_int8,
+    warmup_cosine,
+    warmup_linear,
+)
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(weight_decay=0.0)
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros((3, 1))}
+    state = adamw_init(params, cfg)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.sum((q["w"][:, 0] - target) ** 2))(p)
+        return adamw_update(p, g, s, jnp.float32(0.05), cfg)
+
+    for _ in range(300):
+        params, state = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"][:, 0]), np.asarray(target), atol=1e-2)
+    assert int(state["step"]) == 300
+
+
+def test_adamw_bf16_moments_track_f32():
+    cfg32 = AdamWConfig(moment_dtype="float32", weight_decay=0.0)
+    cfg16 = AdamWConfig(moment_dtype="bfloat16", weight_decay=0.0)
+    params = {"w": jnp.ones((8, 8))}
+    g = {"w": jnp.full((8, 8), 0.1)}
+    s32, s16 = adamw_init(params, cfg32), adamw_init(params, cfg16)
+    p32, p16 = params, params
+    for _ in range(10):
+        p32, s32 = adamw_update(p32, g, s32, jnp.float32(0.01), cfg32)
+        p16, s16 = adamw_update(p16, g, s16, jnp.float32(0.01), cfg16)
+    np.testing.assert_allclose(
+        np.asarray(p32["w"]), np.asarray(p16["w"]), rtol=0.03, atol=3e-3
+    )
+    assert s16["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_weight_decay_applies_to_matrices_not_vectors():
+    cfg = AdamWConfig(weight_decay=0.5)
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    state = adamw_init(params, cfg)
+    p2, _ = adamw_update(params, zero_g, state, jnp.float32(0.1), cfg)
+    assert float(p2["w"][0, 0]) < 1.0  # decayed
+    assert float(p2["b"][0]) == 1.0  # vectors exempt
+
+
+def test_schedules():
+    lr = warmup_cosine(jnp.int32(0), peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr) == 0.0
+    lr = warmup_cosine(jnp.int32(10), peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr) == pytest.approx(1.0)
+    lr_end = warmup_cosine(
+        jnp.int32(100), peak_lr=1.0, warmup_steps=10, total_steps=100, floor=0.1
+    )
+    assert float(lr_end) == pytest.approx(0.1, abs=1e-6)
+    lin = warmup_linear(jnp.int32(55), peak_lr=2.0, warmup_steps=10, total_steps=100)
+    assert 0.0 < float(lin) <= 2.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    from repro.utils import tree_global_norm
+
+    assert float(norm) == pytest.approx(np.sqrt(10 * 9 + 10 * 16), rel=1e-6)
+    assert float(tree_global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # under the cap → untouched
+    same, _ = clip_by_global_norm(g, 1e9)
+    np.testing.assert_allclose(np.asarray(same["a"]), np.asarray(g["a"]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    vals=st.lists(
+        st.floats(-100, 100, allow_nan=False, width=32), min_size=1, max_size=64
+    )
+)
+def test_quantize_roundtrip_error_bound(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s)
+    amax = float(jnp.max(jnp.abs(x)))
+    # symmetric int8: error ≤ scale/2 = amax/254 per element
+    assert float(jnp.max(jnp.abs(deq - x))) <= amax / 254 + 1e-7
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_is_lossless_in_aggregate():
+    """Σ_t transmitted_t = Σ_t g_t - e_T: the residual never exceeds one
+    quantization step, so EF-SGD sees an unbiased gradient stream."""
+    rng = np.random.default_rng(0)
+    g_stream = [jnp.asarray(rng.standard_normal(32), jnp.float32) for _ in range(50)]
+    err = {"w": jnp.zeros(32)}
+    sent_total = np.zeros(32)
+    for g in g_stream:
+        sent, err = error_feedback_compress({"w": g}, err)
+        sent_total += np.asarray(sent["w"])
+    g_total = np.sum([np.asarray(g) for g in g_stream], axis=0)
+    resid = np.abs(g_total - sent_total)
+    # residual equals the final error buffer — bounded by one quant step
+    np.testing.assert_allclose(resid, np.abs(np.asarray(err["w"])), atol=1e-5)
+    assert resid.max() < 0.05
+
+
+def test_compressed_step_close_to_exact_step():
+    cfg = AdamWConfig(weight_decay=0.0)
+    params = {"w": jnp.ones((16,))}
+    g = {"w": jnp.asarray(np.random.default_rng(1).standard_normal(16), jnp.float32)}
+    state = adamw_init(params, cfg)
+    p_exact, _ = adamw_update(params, g, state, jnp.float32(0.01), cfg)
+    sent, _ = error_feedback_compress(g, {"w": jnp.zeros(16)})
+    p_comp, _ = adamw_update(params, sent, adamw_init(params, cfg), jnp.float32(0.01), cfg)
+    np.testing.assert_allclose(
+        np.asarray(p_exact["w"]), np.asarray(p_comp["w"]), atol=5e-3
+    )
