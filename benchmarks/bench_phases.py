@@ -15,7 +15,7 @@ def main() -> None:
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax import shard_map
+    from repro.utils.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     from benchmarks.common import emit, time_fn

@@ -27,6 +27,8 @@ BENCHES = [
     ("benchmarks.bench_phases", ["--keys", "262144"], 8),
     # §5.3 build vs query
     ("benchmarks.bench_build_vs_query", ["--keys", "262144"], 8),
+    # retrieval subsystem: count vs materialize (WarpSpeed-style value API)
+    ("benchmarks.bench_retrieve", ["--keys", "131072"], 8),
     # §5 SOTA comparison
     ("benchmarks.bench_sota_table", ["--keys", "262144"], 8),
     # framework extra: LM step cost

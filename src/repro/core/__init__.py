@@ -10,37 +10,53 @@ from repro.core.hashgraph import (
     HashGraph,
     build,
     build_from_buckets,
+    csr_gather,
+    query_locate,
     query_count_sorted,
     query_count_probe,
     lookup_first,
     contains,
+    inner_join,
     intersect_join_size,
+    retrieve,
 )
 from repro.core.multi_hashgraph import (
     DistributedHashGraph,
+    ShardJoin,
+    ShardRetrieval,
     build_sharded,
     query_sharded,
     contains_sharded,
+    inner_join_sharded,
     join_size_sharded,
+    retrieve_sharded,
 )
 
 __all__ = [
     "EMPTY_KEY",
     "HashGraph",
     "DistributedHashGraph",
+    "ShardJoin",
+    "ShardRetrieval",
     "murmur3_u32",
     "murmur3_stream",
     "hash_to_buckets",
     "fmix32",
     "build",
     "build_from_buckets",
+    "csr_gather",
+    "query_locate",
     "query_count_sorted",
     "query_count_probe",
     "lookup_first",
     "contains",
+    "inner_join",
     "intersect_join_size",
+    "retrieve",
     "build_sharded",
     "query_sharded",
     "contains_sharded",
+    "inner_join_sharded",
     "join_size_sharded",
+    "retrieve_sharded",
 ]

@@ -26,6 +26,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.utils.compat import axis_size as _axis_size
+
 
 @partial(
     jax.tree_util.register_dataclass,
@@ -45,13 +47,13 @@ class Route:
 
 
 def axis_sizes(axis_names: Sequence[str]) -> tuple[int, ...]:
-    return tuple(jax.lax.axis_size(a) for a in axis_names)
+    return tuple(_axis_size(a) for a in axis_names)
 
 
 def device_count(axis_names: Sequence[str]) -> int:
     n = 1
     for a in axis_names:
-        n *= jax.lax.axis_size(a)
+        n *= _axis_size(a)
     return n
 
 
@@ -59,7 +61,7 @@ def my_rank(axis_names: Sequence[str]) -> jax.Array:
     """Row-major composite rank over ``axis_names`` (major axis first)."""
     rank = jnp.int32(0)
     for a in axis_names:
-        rank = rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        rank = rank * _axis_size(a) + jax.lax.axis_index(a)
     return rank
 
 
@@ -171,3 +173,56 @@ def combine(
     ans_sorted = jnp.where(keep, back[route.slot], fill)
     out = jnp.empty_like(ans_sorted)
     return out.at[route.perm].set(ans_sorted)
+
+
+def combine_ragged(
+    seg_values: jax.Array,
+    slot_counts: jax.Array,
+    route: Route,
+    axis_names: Sequence[str],
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Inverse of :func:`dispatch` for *variable-fanout* answers (retrieval).
+
+    :func:`combine` returns exactly one answer per dispatched row; retrieval
+    returns ``count[i]`` values for row ``i``.  The owner packs, for each
+    source device ``s``, the concatenation of its block's answer runs (slot
+    order) into ``seg_values[s]`` of static width ``seg_capacity`` and
+    reports per-slot run lengths in ``slot_counts`` (laid out like the
+    received buffers, ``(D*capacity,)``).  Every device runs this
+    symmetrically: one reverse all-to-all ships the segments home, a second
+    ships the counts, and the exclusive prefix sum of the returned counts
+    reconstructs — without any extra communication — the exact offsets the
+    owner used when packing.
+
+    Returns ``(counts, starts, values)`` in the dispatcher's original row
+    order:
+
+    * ``counts`` — ``(N,)`` int32 result count per row (0 for capacity-dropped
+      rows).
+    * ``starts`` — ``(N,)`` int32 start of row ``i``'s run inside ``values``;
+      row ``i``'s answers are ``values[starts[i] : starts[i]+counts[i]]``.
+    * ``values`` — ``(D*seg_capacity,)`` returned segments, row-major by
+      owner device.
+
+    Segment overflow (a block's runs exceeding ``seg_capacity``) is the
+    *owner's* to report (see ``multi_hashgraph.retrieve_sharded``); this
+    routine never hides it — the counts it returns are the true run lengths.
+    """
+    d, cap = route.num_dest, route.capacity
+    seg_cap = seg_values.shape[1]
+    back_counts = all_to_all_hierarchical(
+        slot_counts.astype(jnp.int32).reshape(d, cap), axis_names
+    )
+    back_vals = all_to_all_hierarchical(seg_values, axis_names)
+    # Owner o packed my block by the exclusive cumsum of my slots' counts —
+    # recompute the identical offsets from the returned counts.
+    block_off = jnp.cumsum(back_counts, axis=1) - back_counts
+    flat_counts = back_counts.reshape(-1)
+    flat_off = block_off.reshape(-1)
+    owner = route.slot // cap
+    starts_packed = owner * seg_cap + flat_off[route.slot]
+    counts_sorted = jnp.where(route.keep, flat_counts[route.slot], 0)
+    starts_sorted = jnp.where(route.keep, starts_packed, 0)
+    counts = jnp.empty_like(counts_sorted).at[route.perm].set(counts_sorted)
+    starts = jnp.empty_like(starts_sorted).at[route.perm].set(starts_sorted)
+    return counts, starts, back_vals.reshape(-1)

@@ -168,6 +168,30 @@ def _segment_searchsorted(
     return lo
 
 
+def query_locate(
+    hg: HashGraph, queries: jax.Array, buckets: Optional[jax.Array] = None
+) -> tuple[jax.Array, jax.Array]:
+    """Locate each query's match run: ``(starts, counts)``.
+
+    All occurrences of a key are contiguous in a bucket-sorted HashGraph, so
+    a query's matches are exactly ``hg.keys[starts[i] : starts[i]+counts[i]]``
+    (and its payloads the same slice of ``hg.values``).  This is the counting
+    pass of the two-pass count→prefix-sum→gather retrieval pipeline.
+
+    ``buckets`` overrides the bucket mapping (distributed shards map keys to
+    local buckets through the global split points, not ``hash % V``).
+    """
+    if not hg.sorted_within_bucket:
+        raise ValueError("query_locate needs a bucket-sorted HashGraph")
+    q = queries.astype(jnp.uint32)
+    b = hg.bucket_of(q) if buckets is None else buckets.astype(jnp.int32)
+    starts = hg.offsets[b]
+    ends = hg.offsets[b + 1]
+    left = _segment_searchsorted(hg.keys, starts, ends, q, side="left")
+    right = _segment_searchsorted(hg.keys, starts, ends, q, side="right")
+    return left.astype(jnp.int32), (right - left).astype(jnp.int32)
+
+
 def query_count_sorted(
     hg: HashGraph, queries: jax.Array, buckets: Optional[jax.Array] = None
 ) -> jax.Array:
@@ -175,19 +199,104 @@ def query_count_sorted(
 
     Requires ``sorted_within_bucket=True``.  O(log bucket_len) gathers per
     query with no cap on duplicates — the beyond-paper query path.
-
-    ``buckets`` overrides the bucket mapping (distributed shards map keys to
-    local buckets through the global split points, not ``hash % V``).
     """
-    if not hg.sorted_within_bucket:
-        raise ValueError("query_count_sorted needs a bucket-sorted HashGraph")
-    q = queries.astype(jnp.uint32)
-    b = hg.bucket_of(q) if buckets is None else buckets.astype(jnp.int32)
-    starts = hg.offsets[b]
-    ends = hg.offsets[b + 1]
-    left = _segment_searchsorted(hg.keys, starts, ends, q, side="left")
-    right = _segment_searchsorted(hg.keys, starts, ends, q, side="right")
-    return (right - left).astype(jnp.int32)
+    _, counts = query_locate(hg, queries, buckets)
+    return counts
+
+
+def csr_gather(
+    starts: jax.Array,
+    counts: jax.Array,
+    table: jax.Array,
+    capacity: int,
+    *,
+    fill=jnp.int32(-1),
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Second pass of the retrieval pipeline: CSR compaction of match runs.
+
+    Row ``i`` owns ``table[starts[i] : starts[i]+counts[i]]``; the runs are
+    concatenated row-major into a static ``(capacity,)`` buffer (HashGraph's
+    CSR-build idiom applied to the *output*: prefix-sum the counts, then one
+    vectorized gather resolves every output slot).
+
+    Returns ``(offsets, row_idx, gathered, num_dropped)``:
+
+    * ``offsets``  — ``(N+1,)`` int32, clamped to ``capacity``; row ``i``'s
+      results are ``gathered[offsets[i]:offsets[i+1]]``.
+    * ``row_idx``  — ``(capacity,)`` int32, source row per output slot
+      (``-1`` in unused slots).
+    * ``gathered`` — ``(capacity,)`` same dtype as ``table``; unused slots
+      carry ``fill``.
+    * ``num_dropped`` — ``()`` int32, ``max(0, total - capacity)``.  Overflow
+      is *reported*, never silent: callers must treat ``num_dropped > 0`` as
+      "re-run with a larger capacity".
+    """
+    counts = counts.astype(jnp.int32)
+    n_rows = counts.shape[0]
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts, dtype=jnp.int32)]
+    )
+    total = offsets[-1]
+    slot = jnp.arange(capacity, dtype=jnp.int32)
+    row = jnp.clip(
+        jnp.searchsorted(offsets, slot, side="right").astype(jnp.int32) - 1,
+        0,
+        n_rows - 1,
+    )
+    src = starts.astype(jnp.int32)[row] + (slot - offsets[row])
+    valid = slot < total
+    tn = table.shape[0]
+    gathered = jnp.where(
+        valid, table[jnp.clip(src, 0, tn - 1)], jnp.asarray(fill, table.dtype)
+    )
+    row_idx = jnp.where(valid, row, jnp.int32(-1))
+    num_dropped = jnp.maximum(total - capacity, 0).astype(jnp.int32)
+    return jnp.minimum(offsets, capacity), row_idx, gathered, num_dropped
+
+
+def retrieve(
+    hg: HashGraph,
+    queries: jax.Array,
+    *,
+    capacity: int,
+    buckets: Optional[jax.Array] = None,
+    fill=jnp.int32(-1),
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Values stored under every occurrence of every query key, CSR-shaped.
+
+    Two-pass count→prefix-sum→gather (the HashGraph build idiom, §3.2,
+    applied to the query side — the WarpSpeed-style retrieval API).  Returns
+    ``(offsets, values, num_dropped)`` with ``offsets`` of shape
+    ``(len(queries)+1,)``: query ``i``'s values are
+    ``values[offsets[i]:offsets[i+1]]`` (within-key order is the table's
+    deterministic bucket order, not insertion order).  ``capacity`` is the
+    static output size; overflow is reported via ``num_dropped``.
+    """
+    starts, counts = query_locate(hg, queries, buckets)
+    offsets, _, values, num_dropped = csr_gather(
+        starts, counts, hg.values, capacity, fill=fill
+    )
+    return offsets, values, num_dropped
+
+
+def inner_join(
+    hg: HashGraph,
+    queries: jax.Array,
+    *,
+    capacity: int,
+    buckets: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Materialized inner join: every ``(query_idx, build_value)`` match pair.
+
+    Returns ``(query_idx, values, num_results, num_dropped)``, each output
+    array of shape ``(capacity,)`` with ``-1`` / fill beyond ``num_results``.
+    """
+    starts, counts = query_locate(hg, queries, buckets)
+    _, query_idx, values, num_dropped = csr_gather(
+        starts, counts, hg.values, capacity
+    )
+    num_results = jnp.minimum(jnp.sum(counts), capacity).astype(jnp.int32)
+    return query_idx, values, num_results, num_dropped
 
 
 def query_count_probe(

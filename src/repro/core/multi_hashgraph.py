@@ -190,6 +190,167 @@ def contains_sharded(
     return query_sharded(dhg, queries, **kw) > 0
 
 
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("offsets", "values", "counts", "num_dropped"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class ShardRetrieval:
+    """Per-device CSR of retrieved values (inside shard_map).
+
+    Local query ``i``'s values are ``values[offsets[i]:offsets[i+1]]``.
+    ``num_dropped`` is a *global* (psum'd) overflow indicator: zero iff no
+    static capacity anywhere in the pipeline truncated results.  When
+    positive it is an unnormalized tally (stage drops can double-count the
+    same missing result), not an exact loss count — treat any nonzero value
+    as "rerun with larger ``seg_capacity``/``out_capacity``".  Never
+    silently truncated.
+    """
+
+    offsets: jax.Array  # (n_local_queries + 1,) int32
+    values: jax.Array  # (out_capacity,) int32
+    counts: jax.Array  # (n_local_queries,) int32
+    num_dropped: jax.Array  # () int32, global
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("query_idx", "values", "num_results", "num_dropped"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class ShardJoin:
+    """Per-device materialized join pairs (inside shard_map).
+
+    ``(query_idx[j], values[j])`` for ``j < num_results[0]`` are the match
+    pairs produced by this device's queries; ``query_idx`` is the *global*
+    query row id (rank * n_local + local index).  Same ``num_dropped``
+    contract as :class:`ShardRetrieval`.
+    """
+
+    query_idx: jax.Array  # (out_capacity,) int32, -1 beyond num_results
+    values: jax.Array  # (out_capacity,) int32
+    num_results: jax.Array  # (1,) int32 — this device's valid pair count
+    num_dropped: jax.Array  # () int32, global
+
+
+def _retrieve_parts(
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    *,
+    seg_capacity: int,
+    out_capacity: int,
+    capacity_slack: float = 1.25,
+):
+    """Shared two-pass distributed retrieval; returns the final local CSR.
+
+    Pass 1 (count): route queries to owning shards by the build splits and
+    locate each routed query's contiguous match run in the local CSR.
+    Pass 2 (gather): each owner prefix-sums the run lengths *per source
+    block* and gathers the matched values into one static segment per source
+    (the HashGraph build idiom applied to results), then a reverse
+    all-to-all returns segments and run lengths to the querying shard, which
+    compacts them into its local output CSR.
+    """
+    axis_names = dhg.axis_names
+    queries = queries.astype(jnp.uint32)
+    n_local = queries.shape[0]
+    num_devices = exchange.device_count(axis_names)
+
+    h = hashing.hash_to_buckets(queries, dhg.hash_range, seed=dhg.seed)
+    dest = partition.destination_of(h, dhg.hash_splits)
+    capacity = default_capacity(n_local, num_devices, capacity_slack)
+    (rq,), route = exchange.dispatch(
+        (queries,), dest, axis_names, capacity, fills=(jnp.uint32(EMPTY_KEY),)
+    )
+
+    rank = exchange.my_rank(axis_names)
+    lo = dhg.hash_splits[rank]
+    rbuckets = _local_buckets(rq, lo, dhg.hash_range, dhg.local_range_cap, dhg.seed)
+    run_starts, run_counts = hashgraph.query_locate(dhg.local, rq, buckets=rbuckets)
+    run_counts = jnp.where(rq == jnp.uint32(EMPTY_KEY), 0, run_counts)
+
+    # Owner side: one packed segment of matched values per source device.
+    starts_b = run_starts.reshape(num_devices, capacity)
+    counts_b = run_counts.reshape(num_devices, capacity)
+    _, _, seg_values, seg_dropped = jax.vmap(
+        lambda s, c: hashgraph.csr_gather(s, c, dhg.local.values, seg_capacity)
+    )(starts_b, counts_b)
+    owner_dropped = jnp.sum(seg_dropped)
+
+    # Querier side: segments + run lengths come home; compact to local CSR.
+    counts, starts, seg_flat = exchange.combine_ragged(
+        seg_values, run_counts, route, axis_names
+    )
+    offsets, query_idx, values, out_dropped = hashgraph.csr_gather(
+        starts, counts, seg_flat, out_capacity
+    )
+    # Overflow indicator, not an exact loss count: the three stages can
+    # double-count one missing result (owner segment + querier output), and
+    # route.num_dropped counts lost query *rows* whose result count is
+    # unknown.  Zero iff nothing anywhere was truncated.
+    num_dropped = jax.lax.psum(
+        owner_dropped + out_dropped + route.num_dropped, axis_names
+    )
+    return offsets, query_idx, values, counts, num_dropped, rank, n_local
+
+
+def retrieve_sharded(
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    *,
+    seg_capacity: int,
+    out_capacity: int,
+    capacity_slack: float = 1.25,
+) -> ShardRetrieval:
+    """All stored values for every occurrence of every local query key.
+
+    Returns this device's :class:`ShardRetrieval` CSR over its ``queries``.
+    Call inside ``shard_map``.
+    """
+    offsets, _, values, counts, num_dropped, _, _ = _retrieve_parts(
+        dhg,
+        queries,
+        seg_capacity=seg_capacity,
+        out_capacity=out_capacity,
+        capacity_slack=capacity_slack,
+    )
+    return ShardRetrieval(
+        offsets=offsets, values=values, counts=counts, num_dropped=num_dropped
+    )
+
+
+def inner_join_sharded(
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    *,
+    seg_capacity: int,
+    out_capacity: int,
+    capacity_slack: float = 1.25,
+) -> ShardJoin:
+    """Materialized inner join ``build ⋈ queries`` as global-row match pairs.
+
+    Call inside ``shard_map``.
+    """
+    _, query_idx, values, counts, num_dropped, rank, n_local = _retrieve_parts(
+        dhg,
+        queries,
+        seg_capacity=seg_capacity,
+        out_capacity=out_capacity,
+        capacity_slack=capacity_slack,
+    )
+    globl = rank.astype(jnp.int32) * n_local + query_idx
+    query_idx = jnp.where(query_idx >= 0, globl, jnp.int32(-1))
+    num_results = jnp.minimum(jnp.sum(counts), out_capacity).astype(jnp.int32)
+    return ShardJoin(
+        query_idx=query_idx,
+        values=values,
+        num_results=num_results[None],
+        num_dropped=num_dropped,
+    )
+
+
 def build_query_hashgraph_sharded(
     dhg: DistributedHashGraph,
     queries: jax.Array,

@@ -18,11 +18,18 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.utils.compat import shard_map
+
+import numpy as np
 
 from repro.core import hashing, multi_hashgraph
 from repro.core.hashgraph import HashGraph
-from repro.core.multi_hashgraph import DistributedHashGraph
+from repro.core.multi_hashgraph import (
+    DistributedHashGraph,
+    ShardJoin,
+    ShardRetrieval,
+)
+from repro.utils import cdiv as _cdiv
 
 
 def _dhg_out_specs(axis_names: Sequence[str], hash_range: int, local_cap: int, seed: int):
@@ -177,3 +184,166 @@ class DistributedHashTable:
             out_specs=P(),
             check_vma=False,
         )(state, queries)
+
+    # -- retrieval (two-pass count→prefix-sum→gather) --------------------------
+    def _retrieve_caps(self, num_queries: int, out_capacity, seg_capacity):
+        """Static output sizing: default to 2× the balanced share, lane-aligned."""
+        n_local = num_queries // self.num_devices
+        if out_capacity is None:
+            out_capacity = 2 * max(n_local, 8)
+        if seg_capacity is None:
+            seg_capacity = out_capacity
+        return _cdiv(out_capacity, 8) * 8, _cdiv(seg_capacity, 8) * 8
+
+    @partial(
+        jax.jit,
+        static_argnums=0,
+        static_argnames=("out_capacity", "seg_capacity"),
+    )
+    def retrieve(
+        self,
+        state: DistributedHashGraph,
+        queries: jax.Array,
+        *,
+        out_capacity: Optional[int] = None,
+        seg_capacity: Optional[int] = None,
+    ) -> ShardRetrieval:
+        """All stored values for every occurrence of every query key.
+
+        Returns a :class:`ShardRetrieval` whose fields are *global* arrays
+        sharded over the mesh — each device holds the CSR over its own query
+        shard: block ``d`` of ``offsets`` (``n_local+1`` rows) indexes block
+        ``d`` of ``values`` (``out_capacity`` rows).  Use
+        :func:`retrieval_to_lists` for a host-side per-query view.
+
+        ``out_capacity`` bounds each device's total result count and
+        ``seg_capacity`` the results any one owner shard returns to one
+        querying shard; both are static.  Overflow is reported in
+        ``num_dropped`` (replicated scalar) — never silently truncated.
+        """
+        out_cap, seg_cap = self._retrieve_caps(
+            queries.shape[0], out_capacity, seg_capacity
+        )
+        in_specs = (
+            _dhg_out_specs(
+                self.axis_names, self.hash_range, self.local_range_cap, self.seed
+            ),
+            self._in_spec(),
+        )
+        ax = tuple(self.axis_names)
+        out_specs = ShardRetrieval(
+            offsets=P(ax), values=P(ax), counts=P(ax), num_dropped=P()
+        )
+
+        def body(dhg, q):
+            return multi_hashgraph.retrieve_sharded(
+                dhg,
+                q,
+                seg_capacity=seg_cap,
+                out_capacity=out_cap,
+                capacity_slack=self.capacity_slack,
+            )
+
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )(state, queries)
+
+    @partial(
+        jax.jit,
+        static_argnums=0,
+        static_argnames=("out_capacity", "seg_capacity"),
+    )
+    def inner_join(
+        self,
+        state: DistributedHashGraph,
+        queries: jax.Array,
+        *,
+        out_capacity: Optional[int] = None,
+        seg_capacity: Optional[int] = None,
+    ) -> ShardJoin:
+        """Materialized inner join: global ``(query_idx, value)`` match pairs.
+
+        Each device emits its pairs into block ``d`` of the global
+        ``query_idx``/``values`` arrays, with its valid-pair count in
+        ``num_results[d]`` (pairs beyond it are ``-1`` padding).
+        ``query_idx`` is the global query row id.  Same capacity/overflow
+        contract as :meth:`retrieve`.
+        """
+        out_cap, seg_cap = self._retrieve_caps(
+            queries.shape[0], out_capacity, seg_capacity
+        )
+        in_specs = (
+            _dhg_out_specs(
+                self.axis_names, self.hash_range, self.local_range_cap, self.seed
+            ),
+            self._in_spec(),
+        )
+        ax = tuple(self.axis_names)
+        out_specs = ShardJoin(
+            query_idx=P(ax), values=P(ax), num_results=P(ax), num_dropped=P()
+        )
+
+        def body(dhg, q):
+            return multi_hashgraph.inner_join_sharded(
+                dhg,
+                q,
+                seg_capacity=seg_cap,
+                out_capacity=out_cap,
+                capacity_slack=self.capacity_slack,
+            )
+
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )(state, queries)
+
+
+def retrieval_to_lists(result: ShardRetrieval) -> list:
+    """Host-side view of a :class:`ShardRetrieval`: one np.ndarray per query.
+
+    Queries are sharded contiguously (device ``d`` owns rows
+    ``d*n_local : (d+1)*n_local``), so global query ``i``'s values sit in
+    device ``i // n_local``'s block of ``values`` at that block's local CSR
+    offsets.
+    """
+    counts = np.asarray(result.counts)
+    offsets = np.asarray(result.offsets)
+    values = np.asarray(result.values)
+    num_queries = counts.shape[0]
+    # len(offsets) = D*(n_local+1), len(counts) = D*n_local  =>  D:
+    d = offsets.shape[0] - counts.shape[0]
+    n_local = num_queries // d
+    out_cap = values.shape[0] // d
+    per_query = []
+    for i in range(num_queries):
+        shard, local = divmod(i, n_local)
+        off = offsets[shard * (n_local + 1) + local]
+        end = offsets[shard * (n_local + 1) + local + 1]
+        per_query.append(values[shard * out_cap + off : shard * out_cap + end])
+    return per_query
+
+
+def join_to_pairs(result: ShardJoin) -> "np.ndarray":
+    """Host-side view of a :class:`ShardJoin`: an (M, 2) array of match pairs."""
+    qi = np.asarray(result.query_idx)
+    vals = np.asarray(result.values)
+    nres = np.asarray(result.num_results)
+    d = nres.shape[0]
+    out_cap = qi.shape[0] // d
+    parts = []
+    for s in range(d):
+        m = int(nres[s])
+        parts.append(
+            np.stack(
+                [qi[s * out_cap : s * out_cap + m], vals[s * out_cap : s * out_cap + m]],
+                axis=1,
+            )
+        )
+    return np.concatenate(parts, axis=0) if parts else np.zeros((0, 2), np.int32)

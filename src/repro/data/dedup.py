@@ -90,7 +90,7 @@ def _distributed_first_rowid(table, state, fp):
     import functools
 
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.utils.compat import shard_map
     from repro.core import multi_hashgraph
 
     def body(dhg, q):

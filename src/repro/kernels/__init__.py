@@ -8,7 +8,8 @@ Kernels:
 
 * ``murmur``          — fused MurmurHash3 + bucket/bin id (Alg. 1 l.2, Alg. 2 l.4-8).
 * ``histogram``       — blocked compare-tile bin histogram (Phase 1 counters).
-* ``bucket_probe``    — the paper's linear bucket scan for queries (§3.3).
+* ``bucket_probe``    — the paper's linear bucket scan for queries (§3.3),
+  plus the CSR gather kernel (pass 2 of the retrieval pipeline).
 * ``flash_attention`` — blockwise online-softmax attention for the LM stack
   (the framework's compute hot-spot; TPU target, validated in interpret mode).
 """

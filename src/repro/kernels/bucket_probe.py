@@ -71,3 +71,101 @@ def bucket_probe_2d(
         interpret=interpret,
         name="bucket_probe",
     )(starts2d, ends2d, q2d, table2d)
+
+
+# ---------------------------------------------------------------------------
+# CSR gather — pass 2 of the count→prefix-sum→gather retrieval pipeline
+# ---------------------------------------------------------------------------
+
+
+def _gather_kernel(
+    offsets_ref, starts_ref, table_ref, vals_ref, rowidx_ref, *, num_rows: int, fill: int, block_rows: int
+):
+    """Resolve a tile of output slots to gathered table values.
+
+    Slot ``s`` belongs to the source row found by binary search in the
+    prefix-sum ``offsets`` (searchsorted side='right', branchless fixed-trip
+    bisection — the same idiom as the query-side segment search), and reads
+    ``table[starts[row] + (s - offsets[row])]``.  ``offsets`` / ``starts`` /
+    ``table`` are whole-array VMEM residents; only the output is tiled.
+    """
+    offsets = offsets_ref[...].reshape(-1)  # (num_rows+1 padded,) int32
+    starts = starts_ref[...].reshape(-1)  # (num_rows padded,) int32
+    table = table_ref[...].reshape(-1)  # (Tn,) int32
+    tn = table.shape[0]
+    i = pl.program_id(0)
+    tile = (block_rows, 128)
+    slot = (
+        i * (block_rows * 128)
+        + jax.lax.broadcasted_iota(jnp.int32, tile, 0) * 128
+        + jax.lax.broadcasted_iota(jnp.int32, tile, 1)
+    )
+    total = jnp.take(offsets, num_rows)
+
+    # searchsorted(offsets, slot, side='right') via fixed-trip bisection.
+    iters = max(1, int(num_rows + 1).bit_length())
+    lo = jnp.zeros(tile, jnp.int32)
+    hi = jnp.full(tile, num_rows + 1, jnp.int32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) >> 1
+        v = jnp.take(offsets, jnp.clip(mid, 0, offsets.shape[0] - 1), axis=0)
+        active = lo < hi
+        go_right = v <= slot
+        new_lo = jnp.where(active & go_right, mid + 1, lo)
+        new_hi = jnp.where(active & ~go_right, mid, hi)
+        return new_lo, new_hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    row = jnp.clip(lo - 1, 0, num_rows - 1)
+    src = jnp.take(starts, row, axis=0) + (slot - jnp.take(offsets, row, axis=0))
+    vals = jnp.take(table, jnp.clip(src, 0, tn - 1), axis=0)
+    valid = slot < total
+    vals_ref[...] = jnp.where(valid, vals, jnp.int32(fill))
+    rowidx_ref[...] = jnp.where(valid, row, jnp.int32(-1))
+
+
+def csr_gather_2d(
+    offsets2d: jax.Array,
+    starts2d: jax.Array,
+    table2d: jax.Array,
+    *,
+    capacity_rows: int,
+    num_rows: int,
+    fill: int = -1,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Gather ``capacity_rows * 128`` output slots from CSR match runs.
+
+    ``offsets2d``: ``(r_o, 128)`` int32 prefix sums (``num_rows + 1`` valid
+    entries, padding must be ``> offsets[num_rows]``, e.g. INT32_MAX);
+    ``starts2d``: ``(r_s, 128)`` int32 run starts per source row;
+    ``table2d``: ``(r_t, 128)`` int32 values table.  Returns
+    ``(values, row_idx)``, each ``(capacity_rows, 128)`` int32 with
+    ``fill`` / ``-1`` in slots past the total run length.
+    """
+    for name, arr in (("offsets", offsets2d), ("starts", starts2d), ("table", table2d)):
+        if arr.shape[1] != 128:
+            raise ValueError(f"{name} lane dim must be 128, got {arr.shape[1]}")
+    grid = (cdiv(capacity_rows, block_rows),)
+    ospec = pl.BlockSpec((block_rows, 128), lambda i: (i, 0), memory_space=pltpu.VMEM)
+
+    def whole(arr):
+        return pl.BlockSpec(arr.shape, lambda i: (0, 0), memory_space=pltpu.VMEM)
+
+    return pl.pallas_call(
+        partial(
+            _gather_kernel, num_rows=num_rows, fill=fill, block_rows=block_rows
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((capacity_rows, 128), jnp.int32),
+            jax.ShapeDtypeStruct((capacity_rows, 128), jnp.int32),
+        ],
+        grid=grid,
+        in_specs=[whole(offsets2d), whole(starts2d), whole(table2d)],
+        out_specs=[ospec, ospec],
+        interpret=interpret,
+        name="csr_gather",
+    )(offsets2d, starts2d, table2d)

@@ -106,6 +106,69 @@ def bucket_probe(
     return out.reshape(-1)[:nq]
 
 
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+@partial(
+    jax.jit, static_argnames=("capacity", "fill", "block_rows", "interpret")
+)
+def csr_gather(
+    starts: jax.Array,
+    counts: jax.Array,
+    table: jax.Array,
+    *,
+    capacity: int,
+    fill: int = -1,
+    block_rows: int = 8,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """CSR match-run compaction (pass 2 of count→prefix-sum→gather retrieval).
+
+    Concatenates ``table[starts[i] : starts[i]+counts[i]]`` row-major into a
+    static ``(capacity,)`` buffer.  The prefix sum runs in XLA; the per-slot
+    binary-search + gather runs in the Pallas kernel with ``offsets`` /
+    ``starts`` / ``table`` resident in VMEM.  Returns
+    ``(offsets, row_idx, gathered, num_dropped)`` — the same contract as
+    ``repro.core.hashgraph.csr_gather`` for 32-bit tables: the kernel moves
+    int32 lanes, so a uint32 ``table`` is bitcast through int32 and restored
+    on output (``fill`` is likewise reinterpreted, e.g. ``-1`` → 0xFFFFFFFF);
+    other dtypes are rejected.
+    """
+    num_rows = counts.shape[0]
+    counts = counts.astype(jnp.int32)
+    out_dtype = table.dtype
+    if out_dtype == jnp.uint32:
+        table = jax.lax.bitcast_convert_type(table, jnp.int32)
+    elif out_dtype != jnp.int32:
+        raise ValueError(f"csr_gather kernel supports int32/uint32 tables, got {out_dtype}")
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts, dtype=jnp.int32)]
+    )
+    total = offsets[-1]
+    # Offsets padding must exceed every real slot id so the bisection never
+    # resolves into it.
+    o, _ = common.pad_to_block_1d(offsets, LANES, _INT32_MAX)
+    s, _ = common.pad_to_block_1d(starts.astype(jnp.int32), LANES, 0)
+    t, _ = common.pad_to_block_1d(table.astype(jnp.int32), LANES, fill)
+    cap_padded = cdiv(capacity, LANES * block_rows) * (LANES * block_rows)
+    vals2d, rows2d = _probe.csr_gather_2d(
+        common.as_lanes(o, LANES),
+        common.as_lanes(s, LANES),
+        common.as_lanes(t, LANES),
+        capacity_rows=cap_padded // LANES,
+        num_rows=num_rows,
+        fill=fill,
+        block_rows=block_rows,
+        interpret=_auto(interpret),
+    )
+    gathered = vals2d.reshape(-1)[:capacity]
+    if out_dtype == jnp.uint32:
+        gathered = jax.lax.bitcast_convert_type(gathered, jnp.uint32)
+    row_idx = rows2d.reshape(-1)[:capacity]
+    num_dropped = jnp.maximum(total - capacity, 0).astype(jnp.int32)
+    return jnp.minimum(offsets, capacity), row_idx, gathered, num_dropped
+
+
 @partial(
     jax.jit,
     static_argnames=(

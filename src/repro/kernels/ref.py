@@ -42,6 +42,37 @@ def bucket_probe_ref(
     )
 
 
+def csr_gather_ref(
+    starts: jax.Array,
+    counts: jax.Array,
+    table: jax.Array,
+    capacity: int,
+    fill: int = -1,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the CSR gather kernel: ``(values, row_idx)``, each (capacity,).
+
+    Deliberately *not* the kernel's searchsorted idiom (that lives in
+    ``repro.core.hashgraph.csr_gather`` too): a plain numpy concatenation of
+    the runs, so a bug in the shared idiom cannot hide in the comparison.
+    """
+    import numpy as np
+
+    starts_n = np.asarray(starts).astype(np.int64)
+    counts_n = np.asarray(counts).astype(np.int64)
+    table_n = np.asarray(table)
+    vals = np.full((capacity,), fill, dtype=np.int32)
+    rows = np.full((capacity,), -1, dtype=np.int32)
+    pos = 0
+    for i, (s, c) in enumerate(zip(starts_n, counts_n)):
+        for j in range(c):
+            if pos >= capacity:
+                break
+            vals[pos] = table_n[min(max(s + j, 0), len(table_n) - 1)]
+            rows[pos] = i
+            pos += 1
+    return jnp.asarray(vals), jnp.asarray(rows)
+
+
 def attention_ref(
     q: jax.Array,
     k: jax.Array,

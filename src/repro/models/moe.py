@@ -27,6 +27,7 @@ from repro.core import exchange
 from repro.distributed.parallel import ParallelConfig
 from repro.models import layers
 from repro.utils import cdiv
+from repro.utils.compat import shard_map
 
 
 def init_moe(key, cfg: ArchConfig, d_in: Optional[int] = None) -> dict:
@@ -166,7 +167,7 @@ def moe_ep(params, x: jax.Array, cfg: ArchConfig, parallel: ParallelConfig):
         out, aux, dropped = _ep_body(p, x2, cfg, ep_axes, capacity)
         return out.reshape(xl.shape), aux, dropped
 
-    out, aux, dropped = jax.shard_map(
+    out, aux, dropped = shard_map(
         body,
         mesh=parallel.mesh,
         in_specs=(P(), P(ep_axes)),

@@ -23,6 +23,8 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.utils.compat import axis_size as _axis_size
+
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
@@ -75,7 +77,7 @@ def compressed_psum_int8(
     """
     d = 1
     for a in axis_names:
-        d *= jax.lax.axis_size(a)
+        d *= _axis_size(a)
     shape = x.shape
     flat = x.astype(jnp.float32).reshape(-1)
     n = flat.shape[0]
@@ -88,7 +90,7 @@ def compressed_psum_int8(
     q = jnp.clip(jnp.round(chunks / scales[:, None]), -127, 127).astype(jnp.int8)
 
     # hop 1 (reduce-scatter): all-to-all int8 payload + f32 scale all-gather.
-    sizes = [jax.lax.axis_size(a) for a in axis_names]
+    sizes = [_axis_size(a) for a in axis_names]
     qq = q.reshape(*sizes, -1)
     for i, a in enumerate(axis_names):
         qq = jax.lax.all_to_all(qq, a, split_axis=i, concat_axis=i, tiled=True)
@@ -99,7 +101,7 @@ def compressed_psum_int8(
     s_all = s_all.reshape(d, d)  # [source, chunk]
     rank = jnp.int32(0)
     for a in axis_names:
-        rank = rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        rank = rank * _axis_size(a) + jax.lax.axis_index(a)
     my_scales = jnp.take(s_all, rank, axis=1)  # (D,) scale of my chunk per src
     reduced = jnp.sum(q_recv.astype(jnp.float32) * my_scales[:, None], axis=0) / d
 

@@ -20,7 +20,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.utils.compat import shard_map
 
 from repro.models.api import ModelBundle
 from repro.optim import adamw_update, clip_by_global_norm

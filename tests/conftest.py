@@ -1,0 +1,32 @@
+"""Shared test configuration.
+
+Forces an 8-way fake host-device platform *before jax initializes* so
+multi-device mesh tests run in-process on CPU-only CI.  Subprocess-based
+tests (``tests/multidevice``) set their own ``XLA_FLAGS`` and are
+unaffected.  If the user already forced a device count, respect it.
+"""
+import os
+
+_FORCE = "--xla_force_host_platform_device_count"
+if _FORCE not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FORCE}=8"
+    ).strip()
+
+import jax  # noqa: E402  (import after the flag so it takes effect)
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    """An 8-way 1-D mesh over the forced host devices."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 (fake) devices; XLA_FLAGS was overridden")
+    return jax.make_mesh((8,), ("d",))
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    """Single-device mesh (degenerate distributed case)."""
+    return jax.make_mesh((1,), ("d",))

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.utils.compat import shard_map
 
 from repro.configs.base import get_smoke_config
 from repro.data import ShardedLoader, SyntheticCorpus

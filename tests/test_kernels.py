@@ -77,6 +77,63 @@ def test_bucket_probe_matches_ref(n, v, dup):
 
 
 # ---------------------------------------------------------------------------
+# CSR gather (retrieval pass 2)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "n_rows,max_run,cap_slack", [(100, 4, 64), (1000, 16, 8), (257, 1, 0), (64, 64, -100)]
+)
+def test_csr_gather_kernel_matches_ref(n_rows, max_run, cap_slack):
+    rng = np.random.default_rng(n_rows * 7 + max_run)
+    table = jnp.asarray(rng.integers(0, 1 << 20, size=4096, dtype=np.int32))
+    counts = jnp.asarray(rng.integers(0, max_run + 1, size=n_rows, dtype=np.int32))
+    starts = jnp.asarray(rng.integers(0, 4096 - max_run, size=n_rows, dtype=np.int32))
+    total = int(np.asarray(counts).sum())
+    capacity = max(8, total + cap_slack)  # covers exact, slack, and overflow
+    off, rows, vals, dropped = ops.csr_gather(
+        starts, counts, table, capacity=capacity, interpret=True
+    )
+    want_vals, want_rows = ref.csr_gather_ref(starts, counts, table, capacity)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(want_vals))
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(want_rows))
+    assert int(dropped) == max(0, total - capacity)
+    # brute-force oracle: concatenation of the runs
+    flat = np.concatenate(
+        [np.asarray(table)[s : s + c] for s, c in zip(np.asarray(starts), np.asarray(counts))]
+        + [np.zeros(0, np.int32)]
+    )
+    m = min(total, capacity)
+    np.testing.assert_array_equal(np.asarray(vals)[:m], flat[:m])
+
+
+def test_csr_gather_kernel_uint32_roundtrip():
+    """uint32 tables (values >= 2**31) survive the int32 kernel lanes."""
+    from repro.core import hashgraph as hgm
+
+    table = jnp.asarray(np.array([1, 2**31 + 5, 2**32 - 2, 7], np.uint32))
+    counts = jnp.asarray(np.array([2, 2], np.int32))
+    starts = jnp.asarray(np.array([1, 0], np.int32))
+    _, _, got, _ = ops.csr_gather(starts, counts, table, capacity=8, interpret=True)
+    _, _, want, _ = hgm.csr_gather(starts, counts, table, 8, fill=jnp.uint32(0))
+    assert got.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(got)[:4], np.asarray(want)[:4])
+
+
+def test_csr_gather_kernel_matches_core():
+    """Kernel path == repro.core.hashgraph.csr_gather (the production oracle)."""
+    from repro.core import hashgraph as hgm
+
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.integers(0, 1 << 20, size=512, dtype=np.int32))
+    counts = jnp.asarray(rng.integers(0, 5, size=200, dtype=np.int32))
+    starts = jnp.asarray(rng.integers(0, 500, size=200, dtype=np.int32))
+    for cap in (8, 256, 1024):
+        got = ops.csr_gather(starts, counts, table, capacity=cap, interpret=True)
+        want = hgm.csr_gather(starts, counts, table, cap)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 ATTN_CASES = [

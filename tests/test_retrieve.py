@@ -1,0 +1,308 @@
+"""Oracle tests for the retrieval subsystem (retrieve / inner_join).
+
+Every test checks against a numpy dict-of-lists oracle: the values stored
+under each key, compared per query up to within-key ordering.  Covers
+duplicate-heavy and adversarial-collision key distributions, single device
+and the 8-way forced-host mesh (see conftest), and the static-capacity
+overflow contract (reported, never silent).
+"""
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashgraph
+from repro.core.table import (
+    DistributedHashTable,
+    join_to_pairs,
+    retrieval_to_lists,
+)
+
+
+def _oracle(keys, values):
+    d = defaultdict(list)
+    for k, v in zip(keys.tolist(), values.tolist()):
+        d[k].append(v)
+    return d
+
+
+def _dup_heavy(rng, n_base, max_mult, key_range):
+    """Duplicate-heavy multiset: each base key repeated 1..max_mult times."""
+    base = rng.choice(
+        np.arange(key_range, dtype=np.uint32), size=n_base, replace=False
+    )
+    mult = rng.integers(1, max_mult + 1, size=n_base)
+    keys = np.repeat(base, mult)
+    rng.shuffle(keys)
+    return base, keys
+
+
+def _assert_retrieval_matches(per_query, queries, oracle):
+    for i, k in enumerate(queries):
+        got = sorted(np.asarray(per_query[i]).tolist())
+        want = sorted(oracle[int(k)])
+        assert got == want, f"query {i} (key {int(k)}): {got} != {want}"
+
+
+# ---------------------------------------------------------------------------
+# single-device HashGraph
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("table_size,max_mult", [(1 << 12, 16), (1 << 12, 256)])
+def test_retrieve_single_device_duplicates(table_size, max_mult):
+    rng = np.random.default_rng(table_size + max_mult)
+    base, keys = _dup_heavy(rng, 512, max_mult, 1 << 20)
+    values = np.arange(len(keys), dtype=np.int32)
+    hg = hashgraph.build(
+        jnp.asarray(keys), table_size=table_size, values=jnp.asarray(values)
+    )
+    oracle = _oracle(keys, values)
+    queries = np.concatenate(
+        [base, rng.integers(0, 1 << 20, size=256, dtype=np.uint32)]
+    )
+    rng.shuffle(queries)
+    total = sum(len(oracle[int(k)]) for k in queries)
+    offsets, vals, dropped = hashgraph.retrieve(
+        hg, jnp.asarray(queries), capacity=total + 64
+    )
+    assert int(dropped) == 0
+    offsets, vals = np.asarray(offsets), np.asarray(vals)
+    per_query = [vals[offsets[i] : offsets[i + 1]] for i in range(len(queries))]
+    _assert_retrieval_matches(per_query, queries, oracle)
+
+
+def test_retrieve_single_device_adversarial_collisions():
+    """Every key lands in the same bucket (table_size=1): pure collision chain."""
+    rng = np.random.default_rng(7)
+    base, keys = _dup_heavy(rng, 64, 32, 1 << 16)
+    values = np.arange(len(keys), dtype=np.int32)
+    hg = hashgraph.build(jnp.asarray(keys), table_size=1, values=jnp.asarray(values))
+    oracle = _oracle(keys, values)
+    queries = np.concatenate([base, base, rng.integers(0, 1 << 16, size=64, dtype=np.uint32)])
+    total = sum(len(oracle[int(k)]) for k in queries)
+    offsets, vals, dropped = hashgraph.retrieve(
+        hg, jnp.asarray(queries), capacity=total + 8
+    )
+    assert int(dropped) == 0
+    offsets, vals = np.asarray(offsets), np.asarray(vals)
+    per_query = [vals[offsets[i] : offsets[i + 1]] for i in range(len(queries))]
+    _assert_retrieval_matches(per_query, queries, oracle)
+
+
+def test_inner_join_single_device_matches_oracle():
+    rng = np.random.default_rng(11)
+    base, keys = _dup_heavy(rng, 256, 24, 1 << 18)
+    values = np.arange(len(keys), dtype=np.int32)
+    hg = hashgraph.build(jnp.asarray(keys), table_size=512, values=jnp.asarray(values))
+    oracle = _oracle(keys, values)
+    queries = np.concatenate([base[:200], rng.integers(0, 1 << 18, size=56, dtype=np.uint32)])
+    total = sum(len(oracle[int(k)]) for k in queries)
+    qidx, vals, num_results, dropped = hashgraph.inner_join(
+        hg, jnp.asarray(queries), capacity=total + 16
+    )
+    assert int(dropped) == 0 and int(num_results) == total
+    got = sorted(
+        (int(a), int(b))
+        for a, b in zip(np.asarray(qidx)[:total], np.asarray(vals)[:total])
+    )
+    want = sorted(
+        (i, v) for i, k in enumerate(queries) for v in oracle[int(k)]
+    )
+    assert got == want
+
+
+def test_retrieve_overflow_reported_not_silent():
+    rng = np.random.default_rng(13)
+    _, keys = _dup_heavy(rng, 128, 8, 1 << 16)
+    values = np.arange(len(keys), dtype=np.int32)
+    hg = hashgraph.build(jnp.asarray(keys), table_size=64, values=jnp.asarray(values))
+    queries = jnp.asarray(keys[:256])
+    full_counts = np.asarray(hashgraph.query_count_sorted(hg, queries))
+    total = int(full_counts.sum())
+    cap = max(8, total // 3)
+    offsets, vals, dropped = hashgraph.retrieve(hg, queries, capacity=cap)
+    assert int(dropped) == total - cap  # exact, not just flagged
+    assert int(np.asarray(offsets).max()) <= cap  # CSR stays in bounds
+    # the values that *are* emitted are a prefix of the full result stream
+    off_full, vals_full, _ = hashgraph.retrieve(hg, queries, capacity=total)
+    np.testing.assert_array_equal(
+        np.asarray(vals)[:cap], np.asarray(vals_full)[:cap]
+    )
+
+
+# ---------------------------------------------------------------------------
+# distributed (8-way forced-host mesh via conftest)
+# ---------------------------------------------------------------------------
+
+
+def _distributed_case(table, rng, n_base, max_mult, key_range, nq):
+    base, keys = _dup_heavy(rng, n_base, max_mult, key_range)
+    pad = (-len(keys)) % table.num_devices
+    if pad:
+        keys = np.concatenate([keys, rng.choice(base, size=pad)])
+    values = np.arange(len(keys), dtype=np.int32)
+    state = table.build(jnp.asarray(keys), values=jnp.asarray(values))
+    assert int(state.num_dropped) == 0
+    oracle = _oracle(keys, values)
+    queries = np.concatenate(
+        [
+            rng.choice(base, size=nq // 2),
+            rng.integers(0, key_range, size=nq - nq // 2).astype(np.uint32),
+        ]
+    )
+    rng.shuffle(queries)
+    return state, oracle, queries
+
+
+def _per_shard_capacity(oracle, queries, num_shards):
+    n_local = len(queries) // num_shards
+    per_shard = [
+        sum(len(oracle[int(k)]) for k in queries[s * n_local : (s + 1) * n_local])
+        for s in range(num_shards)
+    ]
+    return max(8, ((max(per_shard) + 64 + 7) // 8) * 8)
+
+
+def test_retrieve_mesh8_matches_oracle(mesh8):
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 13)
+    rng = np.random.default_rng(17)
+    state, oracle, queries = _distributed_case(table, rng, 512, 64, 1 << 20, 2048)
+    cap = _per_shard_capacity(oracle, queries, 8)
+    res = table.retrieve(
+        state, jnp.asarray(queries), out_capacity=cap, seg_capacity=cap
+    )
+    assert int(res.num_dropped) == 0
+    _assert_retrieval_matches(retrieval_to_lists(res), queries, oracle)
+    # counts agree with the counting query path
+    np.testing.assert_array_equal(
+        np.asarray(res.counts), np.asarray(table.query(state, jnp.asarray(queries)))
+    )
+
+
+def test_retrieve_mesh8_adversarial_collisions(mesh8):
+    """Tiny hash range: every key collides into a handful of buckets and the
+    balanced split degenerates — retrieval must still be exact."""
+    table = DistributedHashTable(
+        mesh8, ("d",), hash_range=4, capacity_slack=16.0, range_slack=4.0
+    )
+    rng = np.random.default_rng(19)
+    state, oracle, queries = _distributed_case(table, rng, 64, 16, 1 << 12, 512)
+    cap = _per_shard_capacity(oracle, queries, 8)
+    res = table.retrieve(
+        state, jnp.asarray(queries), out_capacity=cap, seg_capacity=cap
+    )
+    assert int(res.num_dropped) == 0
+    _assert_retrieval_matches(retrieval_to_lists(res), queries, oracle)
+
+
+def test_inner_join_mesh8_matches_oracle(mesh8):
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 12)
+    rng = np.random.default_rng(23)
+    state, oracle, queries = _distributed_case(table, rng, 256, 32, 1 << 18, 1024)
+    cap = _per_shard_capacity(oracle, queries, 8)
+    join = table.inner_join(
+        state, jnp.asarray(queries), out_capacity=cap, seg_capacity=cap
+    )
+    assert int(join.num_dropped) == 0
+    got = sorted(map(tuple, join_to_pairs(join).tolist()))
+    want = sorted((i, v) for i, k in enumerate(queries) for v in oracle[int(k)])
+    assert got == want
+
+
+def test_retrieve_mesh8_overflow_reported(mesh8):
+    table = DistributedHashTable(
+        mesh8, ("d",), hash_range=1 << 12, capacity_slack=2.0
+    )
+    rng = np.random.default_rng(29)
+    state, oracle, queries = _distributed_case(table, rng, 256, 32, 1 << 18, 1024)
+    res = table.retrieve(state, jnp.asarray(queries), out_capacity=8, seg_capacity=8)
+    assert int(res.num_dropped) > 0
+
+
+def test_retrieve_mesh1_degenerate(mesh1):
+    """Distributed path on a single-device mesh == single-device semantics."""
+    table = DistributedHashTable(mesh1, ("d",), hash_range=1 << 10)
+    rng = np.random.default_rng(31)
+    state, oracle, queries = _distributed_case(table, rng, 128, 16, 1 << 16, 256)
+    cap = _per_shard_capacity(oracle, queries, 1)
+    res = table.retrieve(
+        state, jnp.asarray(queries), out_capacity=cap, seg_capacity=cap
+    )
+    assert int(res.num_dropped) == 0
+    _assert_retrieval_matches(retrieval_to_lists(res), queries, oracle)
+
+
+# ---------------------------------------------------------------------------
+# acceptance scale: >= 1M keys, multiplicities up to 1024
+# ---------------------------------------------------------------------------
+
+
+def _million_key_multiset(rng):
+    """>=1M keys: 4096 distinct keys with multiplicities 1..1024 (E ~ 2.1M)."""
+    base = rng.choice(np.arange(1 << 24, dtype=np.uint32), size=4096, replace=False)
+    mult = rng.integers(1, 1025, size=4096)
+    keys = np.repeat(base, mult)
+    rng.shuffle(keys)
+    return base, keys
+
+
+@pytest.mark.slow
+def test_retrieve_1m_keys_single_device():
+    rng = np.random.default_rng(101)
+    base, keys = _million_key_multiset(rng)
+    assert len(keys) >= 1 << 20
+    values = np.arange(len(keys), dtype=np.int32)
+    hg = hashgraph.build(
+        jnp.asarray(keys), table_size=1 << 18, values=jnp.asarray(values)
+    )
+    oracle = _oracle(keys, values)
+    # probe a sample of hits + misses; verify each against the oracle exactly
+    queries = np.concatenate(
+        [
+            rng.choice(base, size=512),
+            rng.integers(1 << 24, 1 << 25, size=512).astype(np.uint32),
+        ]
+    )
+    total = sum(len(oracle[int(k)]) for k in queries)
+    offsets, vals, dropped = hashgraph.retrieve(
+        hg, jnp.asarray(queries), capacity=((total + 63) // 8) * 8
+    )
+    assert int(dropped) == 0
+    offsets, vals = np.asarray(offsets), np.asarray(vals)
+    per_query = [vals[offsets[i] : offsets[i + 1]] for i in range(len(queries))]
+    _assert_retrieval_matches(per_query, queries, oracle)
+
+
+@pytest.mark.slow
+def test_retrieve_1m_keys_mesh8(mesh8):
+    rng = np.random.default_rng(103)
+    base, keys = _million_key_multiset(rng)
+    pad = (-len(keys)) % 8
+    if pad:
+        keys = np.concatenate([keys, rng.choice(base, size=pad)])
+    values = np.arange(len(keys), dtype=np.int32)
+    table = DistributedHashTable(
+        mesh8, ("d",), hash_range=1 << 18, capacity_slack=2.0
+    )
+    state = table.build(jnp.asarray(keys), values=jnp.asarray(values))
+    assert int(state.num_dropped) == 0
+    oracle = _oracle(keys, values)
+    queries = np.concatenate(
+        [
+            rng.choice(base, size=512),
+            rng.integers(1 << 24, 1 << 25, size=512).astype(np.uint32),
+        ]
+    )
+    rng.shuffle(queries)
+    cap = _per_shard_capacity(oracle, queries, 8)
+    res = table.retrieve(
+        state, jnp.asarray(queries), out_capacity=cap, seg_capacity=cap
+    )
+    assert int(res.num_dropped) == 0
+    _assert_retrieval_matches(retrieval_to_lists(res), queries, oracle)
+    np.testing.assert_array_equal(
+        np.asarray(res.counts), np.asarray(table.query(state, jnp.asarray(queries)))
+    )

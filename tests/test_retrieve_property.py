@@ -1,0 +1,178 @@
+"""Hypothesis property tests for retrieve / inner_join.
+
+The checkers are plain functions over numpy inputs (also exercised by the
+deterministic suite); hypothesis drives them with arbitrary multisets,
+adversarial single-bucket tables, and duplicate-heavy distributions.
+Skipped cleanly when hypothesis is absent (see requirements-dev.txt).
+"""
+from collections import defaultdict
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashgraph
+
+keys_strategy = st.lists(
+    st.integers(min_value=0, max_value=2**32 - 2), min_size=1, max_size=200
+)
+
+
+def _oracle(keys, values):
+    d = defaultdict(list)
+    for k, v in zip(keys, values):
+        d[int(k)].append(int(v))
+    return d
+
+
+def check_retrieve_matches_oracle(build, queries, table_size):
+    """Core property: retrieve returns exactly the stored multiset per key."""
+    keys = np.array(build, np.uint32)
+    values = np.arange(len(keys), dtype=np.int32)
+    hg = hashgraph.build(
+        jnp.asarray(keys), table_size=table_size, values=jnp.asarray(values)
+    )
+    oracle = _oracle(keys, values)
+    q = np.array(queries, np.uint32)
+    total = sum(len(oracle[int(k)]) for k in q)
+    offsets, vals, dropped = hashgraph.retrieve(
+        hg, jnp.asarray(q), capacity=total + 8
+    )
+    assert int(dropped) == 0
+    offsets, vals = np.asarray(offsets), np.asarray(vals)
+    for i, k in enumerate(q):
+        assert sorted(vals[offsets[i] : offsets[i + 1]].tolist()) == sorted(
+            oracle[int(k)]
+        )
+    # CSR run lengths must agree with the counting query
+    counts = np.asarray(hashgraph.query_count_sorted(hg, jnp.asarray(q)))
+    np.testing.assert_array_equal(np.diff(offsets), counts)
+
+
+def check_join_matches_oracle(build, queries, table_size):
+    keys = np.array(build, np.uint32)
+    values = np.arange(len(keys), dtype=np.int32)
+    hg = hashgraph.build(
+        jnp.asarray(keys), table_size=table_size, values=jnp.asarray(values)
+    )
+    oracle = _oracle(keys, values)
+    q = np.array(queries, np.uint32)
+    total = sum(len(oracle[int(k)]) for k in q)
+    qidx, vals, num_results, dropped = hashgraph.inner_join(
+        hg, jnp.asarray(q), capacity=total + 8
+    )
+    assert int(dropped) == 0 and int(num_results) == total
+    got = sorted(
+        (int(a), int(b))
+        for a, b in zip(np.asarray(qidx)[:total], np.asarray(vals)[:total])
+    )
+    want = sorted((i, v) for i, k in enumerate(q) for v in oracle[int(k)])
+    assert got == want
+
+
+def check_overflow_exact(build, queries, capacity):
+    keys = np.array(build, np.uint32)
+    values = np.arange(len(keys), dtype=np.int32)
+    hg = hashgraph.build(
+        jnp.asarray(keys), table_size=max(1, len(keys) // 2), values=jnp.asarray(values)
+    )
+    q = np.array(queries, np.uint32)
+    total = int(
+        np.asarray(hashgraph.query_count_sorted(hg, jnp.asarray(q))).sum()
+    )
+    offsets, vals, dropped = hashgraph.retrieve(hg, jnp.asarray(q), capacity=capacity)
+    assert int(dropped) == max(0, total - capacity)
+    assert int(np.asarray(offsets).max()) <= capacity
+    # emitted slots are a prefix of the untruncated result stream
+    _, vals_full, _ = hashgraph.retrieve(hg, jnp.asarray(q), capacity=total + 1)
+    m = min(capacity, total)
+    np.testing.assert_array_equal(np.asarray(vals)[:m], np.asarray(vals_full)[:m])
+
+
+@settings(max_examples=40, deadline=None)
+@given(build=keys_strategy, queries=keys_strategy, c_inv=st.integers(1, 4))
+def test_retrieve_any_multiset(build, queries, c_inv):
+    check_retrieve_matches_oracle(build, queries, max(1, len(build) // c_inv))
+
+
+@settings(max_examples=25, deadline=None)
+@given(build=keys_strategy, queries=keys_strategy)
+def test_retrieve_adversarial_single_bucket(build, queries):
+    """table_size=1: every key collides into one bucket chain."""
+    check_retrieve_matches_oracle(build, queries, 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    base=st.lists(st.integers(0, 2**20), min_size=1, max_size=24),
+    mult=st.integers(1, 64),
+    c_inv=st.integers(1, 4),
+)
+def test_retrieve_duplicate_heavy(base, mult, c_inv):
+    """Uniform heavy duplication: each key repeated ``mult`` times."""
+    build = [k for k in base for _ in range(mult)]
+    check_retrieve_matches_oracle(
+        build, base, max(1, len(build) // c_inv)
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(build=keys_strategy, queries=keys_strategy, c_inv=st.integers(1, 4))
+def test_join_any_multiset(build, queries, c_inv):
+    check_join_matches_oracle(build, queries, max(1, len(build) // c_inv))
+
+
+@settings(max_examples=25, deadline=None)
+@given(build=keys_strategy, queries=keys_strategy, capacity=st.integers(1, 64))
+def test_overflow_reported_exactly(build, queries, capacity):
+    check_overflow_exact(build, queries, capacity)
+
+
+# ---------------------------------------------------------------------------
+# distributed: fixed shapes (one jit cache entry), hypothesis drives the data
+# ---------------------------------------------------------------------------
+
+_N_KEYS, _N_QUERIES = 1024, 512
+
+
+def check_distributed_retrieve(seed, max_mult, mesh):
+    from repro.core.table import DistributedHashTable, retrieval_to_lists
+
+    rng = np.random.default_rng(seed)
+    base = rng.choice(np.arange(1 << 16, dtype=np.uint32), size=128, replace=False)
+    mult = rng.integers(1, max_mult + 1, size=128)
+    keys = np.repeat(base, mult)[: _N_KEYS]
+    keys = np.concatenate(
+        [keys, rng.choice(base, size=_N_KEYS - len(keys))]
+    ) if len(keys) < _N_KEYS else keys[:_N_KEYS]
+    rng.shuffle(keys)
+    values = np.arange(_N_KEYS, dtype=np.int32)
+    table = DistributedHashTable(
+        mesh, ("d",), hash_range=1 << 10, capacity_slack=4.0
+    )
+    state = table.build(jnp.asarray(keys), values=jnp.asarray(values))
+    assert int(state.num_dropped) == 0
+    oracle = _oracle(keys, values)
+    queries = np.concatenate(
+        [
+            rng.choice(base, size=_N_QUERIES // 2),
+            rng.integers(1 << 16, 1 << 17, size=_N_QUERIES // 2).astype(np.uint32),
+        ]
+    )
+    rng.shuffle(queries)
+    res = table.retrieve(
+        state, jnp.asarray(queries), out_capacity=2 * _N_KEYS, seg_capacity=2 * _N_KEYS
+    )
+    assert int(res.num_dropped) == 0
+    per_q = retrieval_to_lists(res)
+    for i, k in enumerate(queries):
+        assert sorted(np.asarray(per_q[i]).tolist()) == sorted(oracle[int(k)])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), max_mult=st.integers(1, 64))
+def test_distributed_retrieve_property(seed, max_mult, mesh8):
+    check_distributed_retrieve(seed, max_mult, mesh8)

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.analysis import hlo_cost
+from repro.utils.compat import compiled_cost_analysis
 
 
 def _compile(fn, *args):
@@ -25,7 +26,7 @@ def test_scan_trip_count_multiplies_flops():
     assert summ.flops == pytest.approx(2 * 64**3 * 10)
     assert summ.unknown_trip_loops == 0
     # XLA's own counter misses the ×10 — the reason this module exists
-    xla = c.cost_analysis().get("flops", 0.0)
+    xla = compiled_cost_analysis(c).get("flops", 0.0)
     assert xla < summ.flops / 5
 
 

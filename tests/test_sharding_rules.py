@@ -3,7 +3,9 @@ AbstractMesh carries only the axis-name → size mapping)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.utils.compat import abstract_mesh as AbstractMesh
 
 from repro.configs.base import get_config
 from repro.distributed.parallel import ParallelConfig
