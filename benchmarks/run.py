@@ -29,6 +29,8 @@ BENCHES = [
     ("benchmarks.bench_build_vs_query", ["--keys", "262144"], 8),
     # retrieval subsystem: count vs materialize (WarpSpeed-style value API)
     ("benchmarks.bench_retrieve", ["--keys", "131072"], 8),
+    # schema widths: uint32 vs uint64 keys, 1 vs 4 value columns
+    ("benchmarks.bench_widths", ["--keys", "131072"], 8),
     # §5 SOTA comparison
     ("benchmarks.bench_sota_table", ["--keys", "262144"], 8),
     # framework extra: LM step cost

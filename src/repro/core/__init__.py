@@ -4,9 +4,17 @@ Single-device CSR hash table (``hashgraph``), global binned partitioning
 (``partition``), capacity-padded hierarchical all-to-all (``exchange``),
 and the multi-device build/query (``multi_hashgraph``).
 """
-from repro.core.hashing import murmur3_u32, murmur3_stream, hash_to_buckets, fmix32
+from repro.core.hashing import (
+    murmur3_u32,
+    murmur3_stream,
+    murmur3_packed,
+    hash_to_buckets,
+    fmix32,
+)
 from repro.core.hashgraph import (
     EMPTY_KEY,
+    is_empty_key,
+    rows_equal,
     HashGraph,
     build,
     build_from_buckets,
@@ -30,10 +38,19 @@ from repro.core.multi_hashgraph import (
     inner_join_sharded,
     join_size_sharded,
     retrieve_sharded,
+    plan_seg_capacity_sharded,
 )
+from repro.core.schema import TableSchema, pack_u64, unpack_u64
 
 __all__ = [
     "EMPTY_KEY",
+    "is_empty_key",
+    "rows_equal",
+    "TableSchema",
+    "pack_u64",
+    "unpack_u64",
+    "murmur3_packed",
+    "plan_seg_capacity_sharded",
     "HashGraph",
     "DistributedHashGraph",
     "ShardJoin",

@@ -202,7 +202,8 @@ def combine_ragged(
     * ``starts`` — ``(N,)`` int32 start of row ``i``'s run inside ``values``;
       row ``i``'s answers are ``values[starts[i] : starts[i]+counts[i]]``.
     * ``values`` — ``(D*seg_capacity,)`` returned segments, row-major by
-      owner device.
+      owner device (``(D*seg_capacity, C)`` when ``seg_values`` carries
+      trailing payload columns ``(D, seg_capacity, C)``).
 
     Segment overflow (a block's runs exceeding ``seg_capacity``) is the
     *owner's* to report (see ``multi_hashgraph.retrieve_sharded``); this
@@ -210,6 +211,7 @@ def combine_ragged(
     """
     d, cap = route.num_dest, route.capacity
     seg_cap = seg_values.shape[1]
+    rest = seg_values.shape[2:]
     back_counts = all_to_all_hierarchical(
         slot_counts.astype(jnp.int32).reshape(d, cap), axis_names
     )
@@ -225,4 +227,4 @@ def combine_ragged(
     starts_sorted = jnp.where(route.keep, starts_packed, 0)
     counts = jnp.empty_like(counts_sorted).at[route.perm].set(counts_sorted)
     starts = jnp.empty_like(starts_sorted).at[route.perm].set(starts_sorted)
-    return counts, starts, back_vals.reshape(-1)
+    return counts, starts, back_vals.reshape(d * seg_cap, *rest)

@@ -29,15 +29,73 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import hashing
 
-# Sentinel key marking capacity padding (reserved; valid keys must be < 2^32-1).
+# Sentinel key marking capacity padding (reserved; valid keys must be < 2^32-1
+# for 1-lane keys, < 2^64-1 for 2-lane packed keys — the sentinel is all-ones
+# in every lane).
 EMPTY_KEY = 0xFFFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# Lane helpers — the schema layer (repro.core.schema) stores keys as (N,)
+# uint32 or (N, L) packed uint32 lanes (lane 0 least significant) and values
+# as (N,) or (N, C) int32.  Every routine below is polymorphic over both
+# layouts; the 1-D forms are bit-identical to the original 32-bit path.
+# ---------------------------------------------------------------------------
+
+
+def is_empty_key(keys: jax.Array) -> jax.Array:
+    """Padding-sentinel mask: all lanes equal ``EMPTY_KEY``."""
+    if keys.ndim == 1:
+        return keys == jnp.uint32(EMPTY_KEY)
+    return jnp.all(keys == jnp.uint32(EMPTY_KEY), axis=-1)
+
+
+def _cols(arr: jax.Array) -> tuple:
+    """View a (N,) or (N, L) array as a tuple of (N,) lane/column arrays."""
+    if arr.ndim == 1:
+        return (arr,)
+    return tuple(arr[:, i] for i in range(arr.shape[-1]))
+
+
+def _from_cols(cols: Sequence, ndim: int) -> jax.Array:
+    """Inverse of :func:`_cols` for the given original ndim."""
+    if ndim == 1:
+        return cols[0]
+    return jnp.stack(cols, axis=-1)
+
+
+def _rows_lt_eq(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Elementwise row comparison ``(a < b, a == b)``.
+
+    1-D arrays compare directly; (..., L) lane arrays compare as packed
+    big integers (lane L-1 most significant — numeric uint64 order for the
+    2-lane packing).
+    """
+    if a.ndim == 1:
+        return a < b, a == b
+    lt = jnp.zeros(jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]), bool)
+    eq = jnp.ones_like(lt)
+    for l in reversed(range(a.shape[-1])):
+        al, bl = a[..., l], b[..., l]
+        lt = lt | (eq & (al < bl))
+        eq = eq & (al == bl)
+    return lt, eq
+
+
+def rows_equal(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Row equality for 1-D or multi-lane key arrays (broadcasting)."""
+    if a.ndim == 1 and b.ndim == 1:
+        return a == b
+    if a.ndim == 1 or b.ndim == 1:
+        raise ValueError("cannot compare 1-lane with multi-lane keys")
+    return jnp.all(a == b, axis=-1)
 
 
 @partial(
@@ -50,8 +108,8 @@ class HashGraph:
     """CSR hash table.  ``offsets.shape == (table_size + 2,)``."""
 
     offsets: jax.Array  # (V+2,) int32, monotone
-    keys: jax.Array  # (N,) uint32, grouped by bucket
-    values: jax.Array  # (N,) int32 payload
+    keys: jax.Array  # (N,) uint32 or (N, L) packed lanes, grouped by bucket
+    values: jax.Array  # (N,) or (N, C) int32 payload
     table_size: int  # V (static)
     seed: int  # murmur seed (static)
     sorted_within_bucket: bool  # True => binary-search queries are valid
@@ -59,6 +117,14 @@ class HashGraph:
     @property
     def capacity(self) -> int:
         return int(self.keys.shape[0])
+
+    @property
+    def key_lanes(self) -> int:
+        return 1 if self.keys.ndim == 1 else int(self.keys.shape[-1])
+
+    @property
+    def value_cols(self) -> int:
+        return 1 if self.values.ndim == 1 else int(self.values.shape[-1])
 
     @property
     def num_valid(self) -> jax.Array:
@@ -87,10 +153,21 @@ def build_from_buckets(
     buckets = buckets.astype(jnp.int32)
     if values is None:
         values = jnp.arange(keys.shape[0], dtype=jnp.int32)
-    num_keys = 2 if sort_within_bucket else 1
-    sorted_buckets, sorted_keys, sorted_values = jax.lax.sort(
-        (buckets, keys, values), num_keys=num_keys, is_stable=True
+    # Lexicographic sort by (bucket, key) with multi-lane keys compared as
+    # packed big integers: lane L-1 (most significant) right after the
+    # bucket, lane 0 last.  Value columns ride along unsorted-by.
+    key_cols = _cols(keys)
+    val_cols = _cols(values)
+    sort_key_ops = tuple(reversed(key_cols))
+    num_keys = 1 + len(sort_key_ops) if sort_within_bucket else 1
+    out = jax.lax.sort(
+        (buckets, *sort_key_ops, *val_cols), num_keys=num_keys, is_stable=True
     )
+    sorted_buckets = out[0]
+    sorted_keys = _from_cols(
+        tuple(reversed(out[1 : 1 + len(key_cols)])), keys.ndim
+    )
+    sorted_values = _from_cols(out[1 + len(key_cols) :], values.ndim)
     # offsets[v] = first index whose bucket id >= v ;  offsets[V+1] = N.
     offsets = jnp.searchsorted(
         sorted_buckets, jnp.arange(table_size + 2, dtype=jnp.int32), side="left"
@@ -141,7 +218,8 @@ def _segment_searchsorted(
 
     Branchless bisection with a fixed iteration count (log2 of array size),
     so it lowers to a small unrolled loop of gathers — no data-dependent
-    control flow, TPU-friendly.
+    control flow, TPU-friendly.  Multi-lane keys compare as packed big
+    integers (lane L-1 most significant), gathering every lane at ``mid``.
     """
     n = sorted_keys.shape[0]
     # A range of length L needs bit_length(L) halvings to reach lo == hi
@@ -155,10 +233,8 @@ def _segment_searchsorted(
         lo, hi = lohi
         mid = (lo + hi) >> 1
         v = sorted_keys[jnp.clip(mid, 0, n - 1)]
-        if side == "left":
-            go_right = v < q
-        else:
-            go_right = v <= q
+        v_lt, v_eq = _rows_lt_eq(v, q)
+        go_right = v_lt if side == "left" else (v_lt | v_eq)
         active = lo < hi
         new_lo = jnp.where(active & go_right, mid + 1, lo)
         new_hi = jnp.where(active & ~go_right, mid, hi)
@@ -225,8 +301,9 @@ def csr_gather(
       results are ``gathered[offsets[i]:offsets[i+1]]``.
     * ``row_idx``  — ``(capacity,)`` int32, source row per output slot
       (``-1`` in unused slots).
-    * ``gathered`` — ``(capacity,)`` same dtype as ``table``; unused slots
-      carry ``fill``.
+    * ``gathered`` — ``(capacity,)`` (or ``(capacity, C)`` when ``table``
+      has payload columns) same dtype as ``table``; unused slots carry
+      ``fill``.
     * ``num_dropped`` — ``()`` int32, ``max(0, total - capacity)``.  Overflow
       is *reported*, never silent: callers must treat ``num_dropped > 0`` as
       "re-run with a larger capacity".
@@ -246,8 +323,10 @@ def csr_gather(
     src = starts.astype(jnp.int32)[row] + (slot - offsets[row])
     valid = slot < total
     tn = table.shape[0]
+    # table may carry trailing payload columns (N, C); broadcast the mask.
+    valid_b = valid.reshape((-1,) + (1,) * (table.ndim - 1))
     gathered = jnp.where(
-        valid, table[jnp.clip(src, 0, tn - 1)], jnp.asarray(fill, table.dtype)
+        valid_b, table[jnp.clip(src, 0, tn - 1)], jnp.asarray(fill, table.dtype)
     )
     row_idx = jnp.where(valid, row, jnp.int32(-1))
     num_dropped = jnp.maximum(total - capacity, 0).astype(jnp.int32)
@@ -320,14 +399,22 @@ def query_count_probe(
     idx = starts[:, None] + jnp.arange(max_probe, dtype=jnp.int32)[None, :]
     in_bucket = idx < ends[:, None]
     vals = hg.keys[jnp.clip(idx, 0, n - 1)]
-    hits = in_bucket & (vals == q[:, None])
+    if q.ndim == 1:
+        eq = vals == q[:, None]  # (nq, max_probe)
+    else:
+        eq = jnp.all(vals == q[:, None, :], axis=-1)  # lanes reduced
+    hits = in_bucket & eq
     return jnp.sum(hits, axis=1).astype(jnp.int32)
 
 
 def lookup_first(
     hg: HashGraph, queries: jax.Array, buckets: Optional[jax.Array] = None
 ) -> jax.Array:
-    """Value of the first matching key per query, or -1 (join probe)."""
+    """Value row of the first matching key per query, or -1 fill (join probe).
+
+    Returns ``(Nq,)`` int32 for single-column payloads, ``(Nq, C)`` for
+    multi-column (every column filled with -1 on a miss).
+    """
     if not hg.sorted_within_bucket:
         raise ValueError("lookup_first needs a bucket-sorted HashGraph")
     q = queries.astype(jnp.uint32)
@@ -336,13 +423,14 @@ def lookup_first(
     ends = hg.offsets[b + 1]
     left = _segment_searchsorted(hg.keys, starts, ends, q, side="left")
     n = hg.keys.shape[0]
-    found = (left < ends) & (hg.keys[jnp.clip(left, 0, n - 1)] == q)
-    return jnp.where(found, hg.values[jnp.clip(left, 0, n - 1)], jnp.int32(-1))
+    found = (left < ends) & rows_equal(hg.keys[jnp.clip(left, 0, n - 1)], q)
+    found_b = found.reshape((-1,) + (1,) * (hg.values.ndim - 1))
+    return jnp.where(found_b, hg.values[jnp.clip(left, 0, n - 1)], jnp.int32(-1))
 
 
 def contains(hg: HashGraph, queries: jax.Array) -> jax.Array:
     """Membership test per query key."""
-    return lookup_first(hg, queries) >= 0
+    return query_count_sorted(hg, queries) > 0
 
 
 def intersect_join_size(hg_build: HashGraph, hg_query: HashGraph) -> jax.Array:

@@ -90,13 +90,31 @@ def murmur3_stream(words: jax.Array, seed: int = DEFAULT_SEED, axis: int = -1) -
     return fmix32(h)
 
 
+def murmur3_packed(keys: jax.Array, seed: int = DEFAULT_SEED) -> jax.Array:
+    """MurmurHash3_x86_32 of 1-lane or multi-lane packed keys.
+
+    * ``(N,)`` — the single-word path (:func:`murmur3_u32`), unchanged.
+    * ``(N, L)`` — each row is an ``4*L``-byte little-endian message whose
+      i-th 4-byte block is lane ``i``; for the 2-lane uint64 packing
+      (``schema.pack_u64``: lane 0 = low word) this is bit-exact
+      MurmurHash3_x86_32 of the 8-byte little-endian key.
+
+    Returns a ``(N,)`` uint32 hash either way.
+    """
+    if keys.ndim == 1:
+        return murmur3_u32(keys, seed=seed)
+    return murmur3_stream(keys, seed=seed, axis=-1)
+
+
 def hash_to_buckets(keys: jax.Array, table_size: int, seed: int = DEFAULT_SEED) -> jax.Array:
     """``hash(e) mod V`` (Alg. 1 line 2 / Alg. 2 line 4), returned as int32.
 
-    ``table_size`` must be ``<= 2**31 - 1`` so bucket ids fit int32 (the
-    paper similarly caps table size at 2^31 when the key count exceeds 2^32).
+    ``keys`` may be ``(N,)`` uint32 or ``(N, L)`` packed multi-lane keys
+    (:func:`murmur3_packed`).  ``table_size`` must be ``<= 2**31 - 1`` so
+    bucket ids fit int32 (the paper similarly caps table size at 2^31 when
+    the key count exceeds 2^32).
     """
     if table_size <= 0 or table_size > 2**31 - 1:
         raise ValueError(f"table_size must be in [1, 2^31-1], got {table_size}")
-    h = murmur3_u32(keys, seed=seed)
+    h = murmur3_packed(keys, seed=seed)
     return (h % jnp.uint32(table_size)).astype(jnp.int32)

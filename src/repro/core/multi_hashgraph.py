@@ -73,7 +73,7 @@ def _local_buckets(
     """Rebasedhash → local bucket id, sentinel keys → trash bucket."""
     h = hashing.hash_to_buckets(keys, hash_range, seed=seed)
     rebased = jnp.clip(h - lo, 0, local_cap - 1)
-    is_pad = keys == jnp.uint32(EMPTY_KEY)
+    is_pad = hashgraph.is_empty_key(keys)
     return jnp.where(is_pad, jnp.int32(local_cap), rebased)
 
 
@@ -143,6 +143,36 @@ def build_sharded(
     )
 
 
+def _route_queries(
+    dhg: DistributedHashGraph, queries: jax.Array, capacity_slack: float
+) -> tuple[jax.Array, exchange.Route, jax.Array, int]:
+    """Shared query-routing preamble (paper §3.3 phase 1).
+
+    Hash local queries, dispatch them to their owning shards by the *build*
+    splits, and rebase the received keys into local bucket ids.  Every query
+    path (count, retrieve, planning, query-side HashGraph) must route
+    through this one function: the planning round's correctness depends on
+    using the exact same capacity and slot layout as retrieval.
+
+    Returns ``(rq, route, rbuckets, capacity)`` — received queries (padded
+    with the EMPTY sentinel), the reverse route, their local bucket ids, and
+    the per-(src, dst) slot capacity.
+    """
+    axis_names = dhg.axis_names
+    queries = queries.astype(jnp.uint32)
+    num_devices = exchange.device_count(axis_names)
+
+    h = hashing.hash_to_buckets(queries, dhg.hash_range, seed=dhg.seed)
+    dest = partition.destination_of(h, dhg.hash_splits)
+    capacity = default_capacity(queries.shape[0], num_devices, capacity_slack)
+    (rq,), route = exchange.dispatch(
+        (queries,), dest, axis_names, capacity, fills=(jnp.uint32(EMPTY_KEY),)
+    )
+    lo = dhg.hash_splits[exchange.my_rank(axis_names)]
+    rbuckets = _local_buckets(rq, lo, dhg.hash_range, dhg.local_range_cap, dhg.seed)
+    return rq, route, rbuckets, capacity
+
+
 def query_sharded(
     dhg: DistributedHashGraph,
     queries: jax.Array,
@@ -158,20 +188,7 @@ def query_sharded(
     Returns an int32 array aligned with ``queries``.
     """
     axis_names = dhg.axis_names
-    queries = queries.astype(jnp.uint32)
-    n_local = queries.shape[0]
-    num_devices = exchange.device_count(axis_names)
-
-    h = hashing.hash_to_buckets(queries, dhg.hash_range, seed=dhg.seed)
-    dest = partition.destination_of(h, dhg.hash_splits)
-    capacity = default_capacity(n_local, num_devices, capacity_slack)
-    (rq,), route = exchange.dispatch(
-        (queries,), dest, axis_names, capacity, fills=(jnp.uint32(EMPTY_KEY),)
-    )
-
-    rank = exchange.my_rank(axis_names)
-    lo = dhg.hash_splits[rank]
-    rbuckets = _local_buckets(rq, lo, dhg.hash_range, dhg.local_range_cap, dhg.seed)
+    rq, route, rbuckets, _ = _route_queries(dhg, queries, capacity_slack)
     if paper_faithful_probe:
         counts = hashgraph.query_count_probe(
             dhg.local, rq, max_probe=max_probe, buckets=rbuckets
@@ -179,7 +196,7 @@ def query_sharded(
     else:
         counts = hashgraph.query_count_sorted(dhg.local, rq, buckets=rbuckets)
     # Padding slots probe the trash bucket; force their count to zero anyway.
-    counts = jnp.where(rq == jnp.uint32(EMPTY_KEY), 0, counts)
+    counts = jnp.where(hashgraph.is_empty_key(rq), 0, counts)
     return exchange.combine(counts, route, axis_names, fill=jnp.int32(0))
 
 
@@ -235,6 +252,26 @@ class ShardJoin:
     num_dropped: jax.Array  # () int32, global
 
 
+def _use_kernel_default(use_kernel: Optional[bool]) -> bool:
+    """Resolve the kernel-path flag: auto-on on TPU, jnp fallback elsewhere."""
+    if use_kernel is None:
+        return jax.default_backend() == "tpu"
+    return bool(use_kernel)
+
+
+def _csr_gather_any(starts, counts, table, capacity: int, use_kernel: bool):
+    """CSR gather via the Pallas kernel (TPU hot path) or the jnp idiom.
+
+    Same ``(offsets, row_idx, gathered, num_dropped)`` contract either way;
+    the kernel path is the ROADMAP "kernel-path retrieval" item.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.csr_gather(starts, counts, table, capacity=capacity)
+    return hashgraph.csr_gather(starts, counts, table, capacity)
+
+
 def _retrieve_parts(
     dhg: DistributedHashGraph,
     queries: jax.Array,
@@ -242,6 +279,7 @@ def _retrieve_parts(
     seg_capacity: int,
     out_capacity: int,
     capacity_slack: float = 1.25,
+    use_kernel: Optional[bool] = None,
 ):
     """Shared two-pass distributed retrieval; returns the final local CSR.
 
@@ -252,39 +290,47 @@ def _retrieve_parts(
     (the HashGraph build idiom applied to results), then a reverse
     all-to-all returns segments and run lengths to the querying shard, which
     compacts them into its local output CSR.
+
+    ``use_kernel`` selects the Pallas ``csr_gather`` kernel for both gather
+    stages (None = auto: on for TPU, jnp elsewhere).
     """
     axis_names = dhg.axis_names
-    queries = queries.astype(jnp.uint32)
     n_local = queries.shape[0]
     num_devices = exchange.device_count(axis_names)
-
-    h = hashing.hash_to_buckets(queries, dhg.hash_range, seed=dhg.seed)
-    dest = partition.destination_of(h, dhg.hash_splits)
-    capacity = default_capacity(n_local, num_devices, capacity_slack)
-    (rq,), route = exchange.dispatch(
-        (queries,), dest, axis_names, capacity, fills=(jnp.uint32(EMPTY_KEY),)
-    )
-
+    use_kernel = _use_kernel_default(use_kernel)
     rank = exchange.my_rank(axis_names)
-    lo = dhg.hash_splits[rank]
-    rbuckets = _local_buckets(rq, lo, dhg.hash_range, dhg.local_range_cap, dhg.seed)
+
+    rq, route, rbuckets, capacity = _route_queries(dhg, queries, capacity_slack)
     run_starts, run_counts = hashgraph.query_locate(dhg.local, rq, buckets=rbuckets)
-    run_counts = jnp.where(rq == jnp.uint32(EMPTY_KEY), 0, run_counts)
+    run_counts = jnp.where(hashgraph.is_empty_key(rq), 0, run_counts)
 
     # Owner side: one packed segment of matched values per source device.
     starts_b = run_starts.reshape(num_devices, capacity)
     counts_b = run_counts.reshape(num_devices, capacity)
-    _, _, seg_values, seg_dropped = jax.vmap(
-        lambda s, c: hashgraph.csr_gather(s, c, dhg.local.values, seg_capacity)
-    )(starts_b, counts_b)
-    owner_dropped = jnp.sum(seg_dropped)
+    if use_kernel:
+        # Static per-source loop: the kernel is invoked once per source
+        # block (grid-parallel internally) instead of vmapping pallas_call.
+        segs, seg_drops = [], []
+        for s in range(num_devices):
+            _, _, g, dr = _csr_gather_any(
+                starts_b[s], counts_b[s], dhg.local.values, seg_capacity, True
+            )
+            segs.append(g)
+            seg_drops.append(dr)
+        seg_values = jnp.stack(segs)
+        owner_dropped = jnp.sum(jnp.stack(seg_drops))
+    else:
+        _, _, seg_values, seg_dropped = jax.vmap(
+            lambda s, c: hashgraph.csr_gather(s, c, dhg.local.values, seg_capacity)
+        )(starts_b, counts_b)
+        owner_dropped = jnp.sum(seg_dropped)
 
     # Querier side: segments + run lengths come home; compact to local CSR.
     counts, starts, seg_flat = exchange.combine_ragged(
         seg_values, run_counts, route, axis_names
     )
-    offsets, query_idx, values, out_dropped = hashgraph.csr_gather(
-        starts, counts, seg_flat, out_capacity
+    offsets, query_idx, values, out_dropped = _csr_gather_any(
+        starts, counts, seg_flat, out_capacity, use_kernel
     )
     # Overflow indicator, not an exact loss count: the three stages can
     # double-count one missing result (owner segment + querier output), and
@@ -303,6 +349,7 @@ def retrieve_sharded(
     seg_capacity: int,
     out_capacity: int,
     capacity_slack: float = 1.25,
+    use_kernel: Optional[bool] = None,
 ) -> ShardRetrieval:
     """All stored values for every occurrence of every local query key.
 
@@ -315,6 +362,7 @@ def retrieve_sharded(
         seg_capacity=seg_capacity,
         out_capacity=out_capacity,
         capacity_slack=capacity_slack,
+        use_kernel=use_kernel,
     )
     return ShardRetrieval(
         offsets=offsets, values=values, counts=counts, num_dropped=num_dropped
@@ -328,6 +376,7 @@ def inner_join_sharded(
     seg_capacity: int,
     out_capacity: int,
     capacity_slack: float = 1.25,
+    use_kernel: Optional[bool] = None,
 ) -> ShardJoin:
     """Materialized inner join ``build ⋈ queries`` as global-row match pairs.
 
@@ -339,6 +388,7 @@ def inner_join_sharded(
         seg_capacity=seg_capacity,
         out_capacity=out_capacity,
         capacity_slack=capacity_slack,
+        use_kernel=use_kernel,
     )
     globl = rank.astype(jnp.int32) * n_local + query_idx
     query_idx = jnp.where(query_idx >= 0, globl, jnp.int32(-1))
@@ -351,6 +401,33 @@ def inner_join_sharded(
     )
 
 
+def plan_seg_capacity_sharded(
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    *,
+    capacity_slack: float = 1.25,
+) -> jax.Array:
+    """Count-only planning round: the exact ``seg_capacity`` retrieval needs.
+
+    Routes queries exactly like :func:`_retrieve_parts` pass 1 (same splits,
+    same slack, so the same slot layout), sums each source block's match-run
+    lengths on the owner, and ``pmax``-reduces across the mesh: the result is
+    the smallest segment width for which no owner→querier return segment
+    overflows.  This is the ROADMAP "ragged all-to-all" counts round — a
+    cheap reduction instead of shipping ``seg_capacity``-padded value
+    segments sized by worst-case guesses.  Returns a replicated () int32.
+
+    Call inside ``shard_map``.
+    """
+    axis_names = dhg.axis_names
+    num_devices = exchange.device_count(axis_names)
+    rq, _, rbuckets, capacity = _route_queries(dhg, queries, capacity_slack)
+    _, run_counts = hashgraph.query_locate(dhg.local, rq, buckets=rbuckets)
+    run_counts = jnp.where(hashgraph.is_empty_key(rq), 0, run_counts)
+    block_totals = jnp.sum(run_counts.reshape(num_devices, capacity), axis=1)
+    return jax.lax.pmax(jnp.max(block_totals).astype(jnp.int32), axis_names)
+
+
 def build_query_hashgraph_sharded(
     dhg: DistributedHashGraph,
     queries: jax.Array,
@@ -360,18 +437,7 @@ def build_query_hashgraph_sharded(
     """Paper-literal query phase 1: a *second* HashGraph from the query set,
     sharing the build table's splits (used by the list-intersection path and
     the build-vs-query benchmark)."""
-    axis_names = dhg.axis_names
-    queries = queries.astype(jnp.uint32)
-    num_devices = exchange.device_count(axis_names)
-    h = hashing.hash_to_buckets(queries, dhg.hash_range, seed=dhg.seed)
-    dest = partition.destination_of(h, dhg.hash_splits)
-    capacity = default_capacity(queries.shape[0], num_devices, capacity_slack)
-    (rq,), _ = exchange.dispatch(
-        (queries,), dest, axis_names, capacity, fills=(jnp.uint32(EMPTY_KEY),)
-    )
-    rank = exchange.my_rank(axis_names)
-    lo = dhg.hash_splits[rank]
-    rbuckets = _local_buckets(rq, lo, dhg.hash_range, dhg.local_range_cap, dhg.seed)
+    rq, _, rbuckets, _ = _route_queries(dhg, queries, capacity_slack)
     return hashgraph.build_from_buckets(
         rq, rbuckets, dhg.local_range_cap, seed=dhg.seed, sort_within_bucket=True
     )

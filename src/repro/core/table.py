@@ -8,6 +8,12 @@ get back global arrays; all paper phases run inside one jitted shard_map.
     state = table.build(keys)            # keys: (N,) uint32, N % devices == 0
     counts = table.query(state, queries) # multiplicity per query key
     size = table.join_size(state, queries)
+
+The key width and payload shape are set by a :class:`~repro.core.schema.
+TableSchema`: the default (uint32 keys, one int32 value column) is the
+paper's layout and the exact PR-1 API; ``TableSchema("uint64", C)`` stores
+keys as ``(N, 2)`` packed uint32 lanes (``schema.pack_u64``) and values as
+``(N, C)`` int32 columns, threaded through every phase of the pipeline.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ from repro.core.multi_hashgraph import (
     ShardJoin,
     ShardRetrieval,
 )
+from repro.core.schema import TableSchema
 from repro.utils import cdiv as _cdiv
 
 
@@ -56,7 +63,13 @@ def _dhg_out_specs(axis_names: Sequence[str], hash_range: int, local_cap: int, s
 
 @dataclasses.dataclass(eq=False)  # identity hash — required for jit static self
 class DistributedHashTable:
-    """Factory for jitted build/query closures over a fixed mesh."""
+    """Factory for jitted build/query closures over a fixed mesh.
+
+    ``schema`` selects key width and payload columns (default: the paper's
+    uint32 keys + one int32 column).  ``use_kernel`` routes the retrieval
+    gather through the Pallas ``csr_gather`` kernel (None = auto: on for
+    TPU, jnp path elsewhere).
+    """
 
     mesh: jax.sharding.Mesh
     axis_names: tuple
@@ -67,9 +80,13 @@ class DistributedHashTable:
     num_bins: Optional[int] = None
     paper_faithful_probe: bool = False
     max_probe: int = 64
+    schema: Optional[TableSchema] = None
+    use_kernel: Optional[bool] = None
 
     def __post_init__(self):
         self.axis_names = tuple(self.axis_names)
+        if self.schema is None:
+            self.schema = TableSchema()
         self.num_devices = 1
         for a in self.axis_names:
             self.num_devices *= self.mesh.shape[a]
@@ -86,57 +103,72 @@ class DistributedHashTable:
     def _in_spec(self):
         return P(self.axis_names)
 
+    def _pack_queries(self, queries) -> jax.Array:
+        return self.schema.pack_keys(queries)
+
     # -- build ----------------------------------------------------------------
-    @partial(jax.jit, static_argnums=0)
-    def build(self, keys: jax.Array, values: Optional[jax.Array] = None):
-        """Build the distributed table from a global (N,) uint32 key array."""
-        out_specs = _dhg_out_specs(
+    def build(self, keys, values=None):
+        """Build the distributed table from a global key array.
+
+        ``keys``: ``(N,)`` uint32 for the 1-lane schema, ``(N, 2)`` packed
+        uint32 (``schema.pack_u64``) for uint64; ``N % devices == 0``.
+        ``values``: optional ``(N,)`` / ``(N, C)`` int32 payload matching
+        ``schema.value_cols`` (default: global row ids, 1-column only).
+        """
+        keys = self.schema.pack_keys(keys)
+        if values is None:
+            if self.schema.value_cols != 1:
+                raise ValueError(
+                    f"schema has {self.schema.value_cols} value columns; "
+                    "pass explicit values (the row-id default is 1-column)"
+                )
+            return self._build_jit(keys)
+        return self._build_values_jit(keys, self.schema.pack_values(values))
+
+    def _build_body(self, k, v):
+        return multi_hashgraph.build_sharded(
+            k,
+            hash_range=self.hash_range,
+            axis_names=self.axis_names,
+            values=v,
+            num_bins=self.num_bins,
+            capacity_slack=self.capacity_slack,
+            range_slack=self.range_slack,
+            seed=self.seed,
+        )
+
+    def _out_specs(self):
+        return _dhg_out_specs(
             self.axis_names, self.hash_range, self.local_range_cap, self.seed
         )
 
-        def body(k, v):
-            return multi_hashgraph.build_sharded(
-                k,
-                hash_range=self.hash_range,
-                axis_names=self.axis_names,
-                values=v,
-                num_bins=self.num_bins,
-                capacity_slack=self.capacity_slack,
-                range_slack=self.range_slack,
-                seed=self.seed,
-            )
-
-        if values is None:
-
-            def body1(k):
-                return body(k, None)
-
-            return shard_map(
-                body1,
-                mesh=self.mesh,
-                in_specs=(self._in_spec(),),
-                out_specs=out_specs,
-                check_vma=False,
-            )(keys)
+    @partial(jax.jit, static_argnums=0)
+    def _build_jit(self, keys: jax.Array):
         return shard_map(
-            body,
+            lambda k: self._build_body(k, None),
+            mesh=self.mesh,
+            in_specs=(self._in_spec(),),
+            out_specs=self._out_specs(),
+            check_vma=False,
+        )(keys)
+
+    @partial(jax.jit, static_argnums=0)
+    def _build_values_jit(self, keys: jax.Array, values: jax.Array):
+        return shard_map(
+            self._build_body,
             mesh=self.mesh,
             in_specs=(self._in_spec(), self._in_spec()),
-            out_specs=out_specs,
+            out_specs=self._out_specs(),
             check_vma=False,
         )(keys, values)
 
     # -- query ----------------------------------------------------------------
-    @partial(jax.jit, static_argnums=0)
-    def query(self, state: DistributedHashGraph, queries: jax.Array) -> jax.Array:
+    def query(self, state: DistributedHashGraph, queries) -> jax.Array:
         """Multiplicity of each global query key. Returns (Nq,) int32."""
-        in_specs = (
-            _dhg_out_specs(
-                self.axis_names, self.hash_range, self.local_range_cap, self.seed
-            ),
-            self._in_spec(),
-        )
+        return self._query_jit(state, self._pack_queries(queries))
 
+    @partial(jax.jit, static_argnums=0)
+    def _query_jit(self, state: DistributedHashGraph, queries: jax.Array) -> jax.Array:
         def body(dhg, q):
             return multi_hashgraph.query_sharded(
                 dhg,
@@ -149,25 +181,20 @@ class DistributedHashTable:
         return shard_map(
             body,
             mesh=self.mesh,
-            in_specs=in_specs,
+            in_specs=(self._out_specs(), self._in_spec()),
             out_specs=P(self.axis_names),
             check_vma=False,
         )(state, queries)
 
-    @partial(jax.jit, static_argnums=0)
-    def contains(self, state: DistributedHashGraph, queries: jax.Array) -> jax.Array:
+    def contains(self, state: DistributedHashGraph, queries) -> jax.Array:
         return self.query(state, queries) > 0
 
-    @partial(jax.jit, static_argnums=0)
-    def join_size(self, state: DistributedHashGraph, queries: jax.Array) -> jax.Array:
+    def join_size(self, state: DistributedHashGraph, queries) -> jax.Array:
         """Global inner-join cardinality (scalar, replicated)."""
-        in_specs = (
-            _dhg_out_specs(
-                self.axis_names, self.hash_range, self.local_range_cap, self.seed
-            ),
-            self._in_spec(),
-        )
+        return self._join_size_jit(state, self._pack_queries(queries))
 
+    @partial(jax.jit, static_argnums=0)
+    def _join_size_jit(self, state: DistributedHashGraph, queries: jax.Array):
         def body(dhg, q):
             return multi_hashgraph.join_size_sharded(
                 dhg,
@@ -180,30 +207,57 @@ class DistributedHashTable:
         return shard_map(
             body,
             mesh=self.mesh,
-            in_specs=in_specs,
+            in_specs=(self._out_specs(), self._in_spec()),
             out_specs=P(),
             check_vma=False,
         )(state, queries)
 
     # -- retrieval (two-pass count→prefix-sum→gather) --------------------------
-    def _retrieve_caps(self, num_queries: int, out_capacity, seg_capacity):
-        """Static output sizing: default to 2× the balanced share, lane-aligned."""
-        n_local = num_queries // self.num_devices
+    @partial(jax.jit, static_argnums=0)
+    def _plan_seg_capacity_jit(
+        self, state: DistributedHashGraph, queries: jax.Array
+    ) -> jax.Array:
+        def body(dhg, q):
+            return multi_hashgraph.plan_seg_capacity_sharded(
+                dhg, q, capacity_slack=self.capacity_slack
+            )
+
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(self._out_specs(), self._in_spec()),
+            out_specs=P(),
+            check_vma=False,
+        )(state, queries)
+
+    def _resolve_caps(self, state, queries, out_capacity, seg_capacity):
+        """Static output sizing, lane-aligned.
+
+        ``out_capacity=None`` defaults to 2× the balanced per-device share.
+        ``seg_capacity=None`` runs the cheap psum'd-counts planning round
+        (``plan_seg_capacity_sharded``) and sizes the return segments
+        *exactly*, cutting the padded return traffic of the old
+        ``seg = out`` default.
+        """
+        n_local = queries.shape[0] // self.num_devices
         if out_capacity is None:
             out_capacity = 2 * max(n_local, 8)
+        out_cap = _cdiv(out_capacity, 8) * 8
         if seg_capacity is None:
-            seg_capacity = out_capacity
-        return _cdiv(out_capacity, 8) * 8, _cdiv(seg_capacity, 8) * 8
+            planned = int(self._plan_seg_capacity_jit(state, queries))
+            # Round up to a power of two: at most 2x the exact width (still
+            # far below the old seg=out worst case) while quantizing the
+            # static shape so repeated calls with shifting duplicate
+            # structure reuse a bounded set of compiled programs.
+            seg_cap = max(8, 1 << (planned - 1).bit_length()) if planned > 0 else 8
+        else:
+            seg_cap = _cdiv(seg_capacity, 8) * 8
+        return out_cap, seg_cap
 
-    @partial(
-        jax.jit,
-        static_argnums=0,
-        static_argnames=("out_capacity", "seg_capacity"),
-    )
     def retrieve(
         self,
         state: DistributedHashGraph,
-        queries: jax.Array,
+        queries,
         *,
         out_capacity: Optional[int] = None,
         seg_capacity: Optional[int] = None,
@@ -213,23 +267,38 @@ class DistributedHashTable:
         Returns a :class:`ShardRetrieval` whose fields are *global* arrays
         sharded over the mesh — each device holds the CSR over its own query
         shard: block ``d`` of ``offsets`` (``n_local+1`` rows) indexes block
-        ``d`` of ``values`` (``out_capacity`` rows).  Use
-        :func:`retrieval_to_lists` for a host-side per-query view.
+        ``d`` of ``values`` (``out_capacity`` rows; ``(out_capacity, C)``
+        for multi-column schemas).  Use :func:`retrieval_to_lists` for a
+        host-side per-query view.
 
         ``out_capacity`` bounds each device's total result count and
         ``seg_capacity`` the results any one owner shard returns to one
-        querying shard; both are static.  Overflow is reported in
-        ``num_dropped`` (replicated scalar) — never silently truncated.
+        querying shard; both are static.  ``seg_capacity=None`` sizes the
+        segments from a count-only planning round (rounded up to a power of
+        two); the planning round blocks on a device→host read, so under an
+        outer ``jax.jit`` pass explicit capacities instead.  Overflow is
+        reported in ``num_dropped`` (replicated scalar) — never silently
+        truncated.
         """
-        out_cap, seg_cap = self._retrieve_caps(
-            queries.shape[0], out_capacity, seg_capacity
+        queries = self._pack_queries(queries)
+        out_cap, seg_cap = self._resolve_caps(state, queries, out_capacity, seg_capacity)
+        return self._retrieve_jit(
+            state, queries, out_capacity=out_cap, seg_capacity=seg_cap
         )
-        in_specs = (
-            _dhg_out_specs(
-                self.axis_names, self.hash_range, self.local_range_cap, self.seed
-            ),
-            self._in_spec(),
-        )
+
+    @partial(
+        jax.jit,
+        static_argnums=0,
+        static_argnames=("out_capacity", "seg_capacity"),
+    )
+    def _retrieve_jit(
+        self,
+        state: DistributedHashGraph,
+        queries: jax.Array,
+        *,
+        out_capacity: int,
+        seg_capacity: int,
+    ) -> ShardRetrieval:
         ax = tuple(self.axis_names)
         out_specs = ShardRetrieval(
             offsets=P(ax), values=P(ax), counts=P(ax), num_dropped=P()
@@ -239,28 +308,24 @@ class DistributedHashTable:
             return multi_hashgraph.retrieve_sharded(
                 dhg,
                 q,
-                seg_capacity=seg_cap,
-                out_capacity=out_cap,
+                seg_capacity=seg_capacity,
+                out_capacity=out_capacity,
                 capacity_slack=self.capacity_slack,
+                use_kernel=self.use_kernel,
             )
 
         return shard_map(
             body,
             mesh=self.mesh,
-            in_specs=in_specs,
+            in_specs=(self._out_specs(), self._in_spec()),
             out_specs=out_specs,
             check_vma=False,
         )(state, queries)
 
-    @partial(
-        jax.jit,
-        static_argnums=0,
-        static_argnames=("out_capacity", "seg_capacity"),
-    )
     def inner_join(
         self,
         state: DistributedHashGraph,
-        queries: jax.Array,
+        queries,
         *,
         out_capacity: Optional[int] = None,
         seg_capacity: Optional[int] = None,
@@ -273,15 +338,25 @@ class DistributedHashTable:
         ``query_idx`` is the global query row id.  Same capacity/overflow
         contract as :meth:`retrieve`.
         """
-        out_cap, seg_cap = self._retrieve_caps(
-            queries.shape[0], out_capacity, seg_capacity
+        queries = self._pack_queries(queries)
+        out_cap, seg_cap = self._resolve_caps(state, queries, out_capacity, seg_capacity)
+        return self._inner_join_jit(
+            state, queries, out_capacity=out_cap, seg_capacity=seg_cap
         )
-        in_specs = (
-            _dhg_out_specs(
-                self.axis_names, self.hash_range, self.local_range_cap, self.seed
-            ),
-            self._in_spec(),
-        )
+
+    @partial(
+        jax.jit,
+        static_argnums=0,
+        static_argnames=("out_capacity", "seg_capacity"),
+    )
+    def _inner_join_jit(
+        self,
+        state: DistributedHashGraph,
+        queries: jax.Array,
+        *,
+        out_capacity: int,
+        seg_capacity: int,
+    ) -> ShardJoin:
         ax = tuple(self.axis_names)
         out_specs = ShardJoin(
             query_idx=P(ax), values=P(ax), num_results=P(ax), num_dropped=P()
@@ -291,18 +366,79 @@ class DistributedHashTable:
             return multi_hashgraph.inner_join_sharded(
                 dhg,
                 q,
-                seg_capacity=seg_cap,
-                out_capacity=out_cap,
+                seg_capacity=seg_capacity,
+                out_capacity=out_capacity,
                 capacity_slack=self.capacity_slack,
+                use_kernel=self.use_kernel,
             )
 
         return shard_map(
             body,
             mesh=self.mesh,
-            in_specs=in_specs,
+            in_specs=(self._out_specs(), self._in_spec()),
             out_specs=out_specs,
             check_vma=False,
         )(state, queries)
+
+    # -- dynamic output buffers (ROADMAP: auto-retry on overflow) --------------
+    def _auto_retry(
+        self, jit_fn, state, queries, out_capacity, seg_capacity, max_retries
+    ):
+        """Re-run ``jit_fn`` with doubled caps while ``num_dropped > 0``.
+
+        Bails early when doubling stops shrinking ``num_dropped`` — drops
+        from the *dispatch* stage depend on ``capacity_slack``, not on the
+        output caps, so no amount of doubling (and recompiling) fixes them.
+        """
+        queries = self._pack_queries(queries)
+        out_cap, seg_cap = self._resolve_caps(state, queries, out_capacity, seg_capacity)
+        res = jit_fn(state, queries, out_capacity=out_cap, seg_capacity=seg_cap)
+        dropped = int(res.num_dropped)
+        for _ in range(max_retries):
+            if dropped == 0:
+                break
+            out_cap, seg_cap = out_cap * 2, seg_cap * 2
+            res = jit_fn(state, queries, out_capacity=out_cap, seg_capacity=seg_cap)
+            prev, dropped = dropped, int(res.num_dropped)
+            if dropped >= prev:
+                break  # not a capacity problem (e.g. route drops)
+        return res
+
+    def retrieve_auto(
+        self,
+        state: DistributedHashGraph,
+        queries,
+        *,
+        out_capacity: Optional[int] = None,
+        seg_capacity: Optional[int] = None,
+        max_retries: int = 4,
+    ) -> ShardRetrieval:
+        """:meth:`retrieve` with bounded capacity-doubling retries.
+
+        Re-runs with doubled ``out_capacity``/``seg_capacity`` while
+        ``num_dropped > 0``, at most ``max_retries`` times (each retry is a
+        fresh static shape, hence a recompile — the price of a guaranteed
+        fit).  Returns the last attempt either way; callers still check
+        ``num_dropped`` (nonzero only if the bound was exhausted or the
+        drops are not capacity-fixable).
+        """
+        return self._auto_retry(
+            self._retrieve_jit, state, queries, out_capacity, seg_capacity, max_retries
+        )
+
+    def inner_join_auto(
+        self,
+        state: DistributedHashGraph,
+        queries,
+        *,
+        out_capacity: Optional[int] = None,
+        seg_capacity: Optional[int] = None,
+        max_retries: int = 4,
+    ) -> ShardJoin:
+        """:meth:`inner_join` with bounded capacity-doubling retries."""
+        return self._auto_retry(
+            self._inner_join_jit, state, queries, out_capacity, seg_capacity, max_retries
+        )
 
 
 def retrieval_to_lists(result: ShardRetrieval) -> list:
@@ -311,7 +447,7 @@ def retrieval_to_lists(result: ShardRetrieval) -> list:
     Queries are sharded contiguously (device ``d`` owns rows
     ``d*n_local : (d+1)*n_local``), so global query ``i``'s values sit in
     device ``i // n_local``'s block of ``values`` at that block's local CSR
-    offsets.
+    offsets.  Multi-column schemas yield ``(k_i, C)`` arrays per query.
     """
     counts = np.asarray(result.counts)
     offsets = np.asarray(result.offsets)
@@ -331,9 +467,12 @@ def retrieval_to_lists(result: ShardRetrieval) -> list:
 
 
 def join_to_pairs(result: ShardJoin) -> "np.ndarray":
-    """Host-side view of a :class:`ShardJoin`: an (M, 2) array of match pairs."""
+    """Host-side view of a :class:`ShardJoin`: an (M, 1 + C) array of rows
+    ``(query_idx, *value_columns)`` — ``(M, 2)`` for the 1-column schema."""
     qi = np.asarray(result.query_idx)
     vals = np.asarray(result.values)
+    if vals.ndim == 1:
+        vals = vals[:, None]
     nres = np.asarray(result.num_results)
     d = nres.shape[0]
     out_cap = qi.shape[0] // d
@@ -341,9 +480,17 @@ def join_to_pairs(result: ShardJoin) -> "np.ndarray":
     for s in range(d):
         m = int(nres[s])
         parts.append(
-            np.stack(
-                [qi[s * out_cap : s * out_cap + m], vals[s * out_cap : s * out_cap + m]],
+            np.concatenate(
+                [
+                    qi[s * out_cap : s * out_cap + m, None],
+                    vals[s * out_cap : s * out_cap + m],
+                ],
                 axis=1,
             )
         )
-    return np.concatenate(parts, axis=0) if parts else np.zeros((0, 2), np.int32)
+    ncols = 1 + vals.shape[1]
+    return (
+        np.concatenate(parts, axis=0)
+        if parts
+        else np.zeros((0, ncols), np.int32)
+    )

@@ -133,6 +133,11 @@ def csr_gather(
     int32 lanes, so a uint32 ``table`` is bitcast through int32 and restored
     on output (``fill`` is likewise reinterpreted, e.g. ``-1`` → 0xFFFFFFFF);
     other dtypes are rejected.
+
+    Lane-aware: for a multi-column ``(Tn, C)`` table the kernel resolves the
+    per-slot binary search once (column 0); the remaining columns reuse the
+    returned row indices with a plain XLA gather, so the bisection cost does
+    not scale with ``C``.  ``gathered`` has shape ``(capacity, C)``.
     """
     num_rows = counts.shape[0]
     counts = counts.astype(jnp.int32)
@@ -149,8 +154,9 @@ def csr_gather(
     # resolves into it.
     o, _ = common.pad_to_block_1d(offsets, LANES, _INT32_MAX)
     s, _ = common.pad_to_block_1d(starts.astype(jnp.int32), LANES, 0)
-    t, _ = common.pad_to_block_1d(table.astype(jnp.int32), LANES, fill)
     cap_padded = cdiv(capacity, LANES * block_rows) * (LANES * block_rows)
+    col0 = table if table.ndim == 1 else table[:, 0]
+    t, _ = common.pad_to_block_1d(col0.astype(jnp.int32), LANES, fill)
     vals2d, rows2d = _probe.csr_gather_2d(
         common.as_lanes(o, LANES),
         common.as_lanes(s, LANES),
@@ -161,10 +167,25 @@ def csr_gather(
         block_rows=block_rows,
         interpret=_auto(interpret),
     )
-    gathered = vals2d.reshape(-1)[:capacity]
+    row_idx = rows2d.reshape(-1)[:capacity]
+    if table.ndim == 1:
+        gathered = vals2d.reshape(-1)[:capacity]
+    else:
+        # Reuse the kernel's row resolution for the remaining columns: the
+        # same src = starts[row] + (slot - offsets[row]) arithmetic, one
+        # vectorized gather per column.
+        slot = jnp.arange(capacity, dtype=jnp.int32)
+        valid = row_idx >= 0
+        rowc = jnp.clip(row_idx, 0, num_rows - 1)
+        src = starts.astype(jnp.int32)[rowc] + (slot - offsets[rowc])
+        srcc = jnp.clip(src, 0, table.shape[0] - 1)
+        cols = [vals2d.reshape(-1)[:capacity]] + [
+            jnp.where(valid, table[srcc, c], jnp.int32(fill))
+            for c in range(1, table.shape[1])
+        ]
+        gathered = jnp.stack(cols, axis=-1)
     if out_dtype == jnp.uint32:
         gathered = jax.lax.bitcast_convert_type(gathered, jnp.uint32)
-    row_idx = rows2d.reshape(-1)[:capacity]
     num_dropped = jnp.maximum(total - capacity, 0).astype(jnp.int32)
     return jnp.minimum(offsets, capacity), row_idx, gathered, num_dropped
 

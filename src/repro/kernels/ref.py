@@ -51,16 +51,18 @@ def csr_gather_ref(
 ) -> tuple[jax.Array, jax.Array]:
     """Oracle for the CSR gather kernel: ``(values, row_idx)``, each (capacity,).
 
-    Deliberately *not* the kernel's searchsorted idiom (that lives in
-    ``repro.core.hashgraph.csr_gather`` too): a plain numpy concatenation of
-    the runs, so a bug in the shared idiom cannot hide in the comparison.
+    Lane-aware: a multi-column ``(Tn, C)`` table yields ``(capacity, C)``
+    values.  Deliberately *not* the kernel's searchsorted idiom (that lives
+    in ``repro.core.hashgraph.csr_gather`` too): a plain numpy concatenation
+    of the runs, so a bug in the shared idiom cannot hide in the comparison.
     """
     import numpy as np
 
     starts_n = np.asarray(starts).astype(np.int64)
     counts_n = np.asarray(counts).astype(np.int64)
     table_n = np.asarray(table)
-    vals = np.full((capacity,), fill, dtype=np.int32)
+    out_shape = (capacity,) + table_n.shape[1:]
+    vals = np.full(out_shape, fill, dtype=np.int32)
     rows = np.full((capacity,), -1, dtype=np.int32)
     pos = 0
     for i, (s, c) in enumerate(zip(starts_n, counts_n)):
