@@ -31,6 +31,8 @@ BENCHES = [
     ("benchmarks.bench_retrieve", ["--keys", "131072"], 8),
     # schema widths: uint32 vs uint64 keys, 1 vs 4 value columns
     ("benchmarks.bench_widths", ["--keys", "131072"], 8),
+    # versioned state: insert/delete/compact throughput vs delta depth
+    ("benchmarks.bench_updates", ["--keys", "131072"], 8),
     # §5 SOTA comparison
     ("benchmarks.bench_sota_table", ["--keys", "262144"], 8),
     # framework extra: LM step cost

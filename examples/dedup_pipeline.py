@@ -5,7 +5,6 @@ HashGraph dedup stage and reports how many rows were replaced per batch.
 
     PYTHONPATH=src python examples/dedup_pipeline.py
 """
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data import SyntheticCorpus, dedup_mask, sequence_fingerprints

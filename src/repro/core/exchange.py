@@ -71,6 +71,7 @@ def pack_by_destination(
     num_dest: int,
     capacity: int,
     fills: Sequence,
+    count_mask: jax.Array = None,
 ) -> tuple[list[jax.Array], Route]:
     """Counting-sort ``payloads`` by destination into a (num_dest*capacity,) buffer.
 
@@ -78,7 +79,10 @@ def pack_by_destination(
     ``BuffCounter``/``BuffOffset`` counting sort (same output, no atomics).
     Rows beyond ``capacity`` per destination are dropped and counted
     (``num_dropped``) — Phase 1's balanced split keeps this at zero for any
-    sane slack; callers assert on it in tests.
+    sane slack; callers assert on it in tests.  ``count_mask`` marks the
+    rows whose loss matters: True rows count toward ``num_dropped`` when
+    dropped, False rows (padding a caller routes only for load spreading,
+    e.g. compaction rebuilds) drop silently.
     """
     n = dest.shape[0]
     dest = dest.astype(jnp.int32)
@@ -95,11 +99,12 @@ def pack_by_destination(
         p = jnp.asarray(p)
         buf = jnp.full((num_dest * capacity,) + p.shape[1:], fill, dtype=p.dtype)
         packed.append(buf.at[scatter_idx].set(p[perm], mode="drop"))
+    counted = ~keep if count_mask is None else (~keep & count_mask[perm])
     route = Route(
         perm=perm,
         slot=slot,
         keep=keep,
-        num_dropped=jnp.sum(~keep).astype(jnp.int32),
+        num_dropped=jnp.sum(counted).astype(jnp.int32),
         num_dest=num_dest,
         capacity=capacity,
     )
@@ -135,15 +140,20 @@ def dispatch(
     axis_names: Sequence[str],
     capacity: int,
     fills: Sequence,
+    count_mask: jax.Array = None,
 ) -> tuple[list[jax.Array], Route]:
     """Send each payload row to device ``dest[row]``.
 
     Returns per-device received buffers of shape ``(D * capacity,)`` —
     row-major by *source* device — plus the :class:`Route` to send answers
     back.  Padding rows carry the corresponding ``fills`` sentinel.
+    ``count_mask`` restricts overflow accounting to the rows it marks
+    (see :func:`pack_by_destination`).
     """
     num_dest = device_count(axis_names)
-    packed, route = pack_by_destination(payloads, dest, num_dest, capacity, fills)
+    packed, route = pack_by_destination(
+        payloads, dest, num_dest, capacity, fills, count_mask=count_mask
+    )
     received = []
     for buf in packed:
         b = buf.reshape(num_dest, capacity, *buf.shape[1:])

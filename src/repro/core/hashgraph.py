@@ -89,6 +89,28 @@ def _rows_lt_eq(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
     return lt, eq
 
 
+def match_epochs(
+    keys: jax.Array, ts_keys: jax.Array, ts_epochs: jax.Array
+) -> jax.Array:
+    """Newest tombstone epoch matching each key; ``-1`` where none match.
+
+    ``keys`` is ``(M,)`` / ``(M, L)``; ``ts_keys`` a ``(T,)`` / ``(T, L)``
+    tombstone buffer whose unused slots hold the EMPTY sentinel with epoch
+    ``-1``.  A layer of the versioned table with epoch ``e`` must hide key
+    ``k`` iff ``match_epochs(k) >= e`` — deletions mask every layer that
+    existed when they were issued, and nothing inserted after.  ``O(M * T)``
+    vectorized compares; the tombstone ring is small and bounded.
+    """
+    if ts_keys.shape[0] == 0:
+        return jnp.full(keys.shape[:1], -1, jnp.int32)
+    if keys.ndim == 1:
+        eq = keys[:, None] == ts_keys[None, :]
+    else:
+        eq = jnp.all(keys[:, None, :] == ts_keys[None, :, :], axis=-1)
+    stamped = jnp.where(eq, ts_epochs[None, :].astype(jnp.int32), jnp.int32(-1))
+    return jnp.max(stamped, axis=1)
+
+
 def rows_equal(a: jax.Array, b: jax.Array) -> jax.Array:
     """Row equality for 1-D or multi-lane key arrays (broadcasting)."""
     if a.ndim == 1 and b.ndim == 1:

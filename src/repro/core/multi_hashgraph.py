@@ -87,11 +87,17 @@ def build_sharded(
     capacity_slack: float = 1.25,
     range_slack: float = 1.5,
     seed: int = hashing.DEFAULT_SEED,
+    capacity: Optional[int] = None,
 ) -> DistributedHashGraph:
     """Build the distributed HashGraph from this device's local ``keys``.
 
     ``values`` (payload, e.g. original global row ids for joins) ride along
-    through the exchange.  Call inside ``shard_map``.
+    through the exchange.  ``keys`` may contain EMPTY sentinels (compaction
+    rebuilds ship tombstoned rows masked to EMPTY): sentinels are excluded
+    from the balanced-split histogram and the overflow count, spread
+    round-robin over destinations, and land in the owner's trash bucket.
+    ``capacity`` overrides the per-destination slot size (compaction passes
+    an allowance for the sentinel rows).  Call inside ``shard_map``.
     """
     axis_names = tuple(axis_names)
     keys = keys.astype(jnp.uint32)
@@ -103,25 +109,33 @@ def build_sharded(
         values = exchange.my_rank(axis_names) * n_local + jnp.arange(
             n_local, dtype=jnp.int32
         )
+    is_pad = hashgraph.is_empty_key(keys)
 
     # ---- Phase 1: partitioning --------------------------------------------
     bins_g = num_bins or partition.choose_num_bins(hash_range, num_devices)
     h = hashing.hash_to_buckets(keys, hash_range, seed=seed)
-    hist = partition.local_bin_histogram(h, bins_g, hash_range)
+    hist = partition.local_bin_histogram(h, bins_g, hash_range, valid=~is_pad)
     ghist = jax.lax.psum(hist, axis_names)
     splits = partition.balanced_hash_splits(ghist, num_devices, hash_range)
 
     # ---- Phase 2: reorganization ------------------------------------------
     dest = partition.destination_of(h, splits)
+    # Sentinels route round-robin (all EMPTY rows hash identically — sending
+    # them by hash would funnel every one to a single owner's slot).
+    dest = jnp.where(
+        is_pad, jnp.arange(n_local, dtype=jnp.int32) % num_devices, dest
+    )
 
     # ---- Phase 3: movement -------------------------------------------------
-    capacity = default_capacity(n_local, num_devices, capacity_slack)
+    if capacity is None:
+        capacity = default_capacity(n_local, num_devices, capacity_slack)
     (rkeys, rvalues), route = exchange.dispatch(
         (keys, values),
         dest,
         axis_names,
         capacity,
         fills=(jnp.uint32(EMPTY_KEY), jnp.int32(-1)),
+        count_mask=~is_pad,
     )
 
     # ---- Phase 4: local HashGraph creation ---------------------------------
@@ -173,6 +187,27 @@ def _route_queries(
     return rq, route, rbuckets, capacity
 
 
+def _mask_counts(
+    counts: jax.Array,
+    rq: jax.Array,
+    tombstones: Optional[tuple[jax.Array, jax.Array]],
+    layer_epoch: int,
+) -> jax.Array:
+    """Zero counts of padding slots and of rows hidden by tombstones.
+
+    ``tombstones`` is the ``(ts_keys, ts_epochs)`` pair of the versioned
+    table (see ``repro.core.state``); a row is hidden from the layer with
+    epoch ``layer_epoch`` iff a matching tombstone with epoch >=
+    ``layer_epoch`` exists (deleted at or after this layer's creation).
+    """
+    counts = jnp.where(hashgraph.is_empty_key(rq), 0, counts)
+    if tombstones is not None:
+        ts_keys, ts_epochs = tombstones
+        hidden = hashgraph.match_epochs(rq, ts_keys, ts_epochs) >= layer_epoch
+        counts = jnp.where(hidden, 0, counts)
+    return counts
+
+
 def query_sharded(
     dhg: DistributedHashGraph,
     queries: jax.Array,
@@ -180,12 +215,16 @@ def query_sharded(
     capacity_slack: float = 1.25,
     paper_faithful_probe: bool = False,
     max_probe: int = 64,
+    tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+    layer_epoch: int = 0,
 ) -> jax.Array:
     """Multiplicity of each local query key in the distributed table.
 
     Phases (paper §3.3 "Querying Multi-GPU HashGraph"): route queries by the
     *build* splits, count against the local shard, route counts back.
-    Returns an int32 array aligned with ``queries``.
+    ``tombstones``/``layer_epoch`` mask rows deleted from this layer of a
+    versioned table (see :func:`_mask_counts`).  Returns an int32 array
+    aligned with ``queries``.
     """
     axis_names = dhg.axis_names
     rq, route, rbuckets, _ = _route_queries(dhg, queries, capacity_slack)
@@ -196,8 +235,29 @@ def query_sharded(
     else:
         counts = hashgraph.query_count_sorted(dhg.local, rq, buckets=rbuckets)
     # Padding slots probe the trash bucket; force their count to zero anyway.
-    counts = jnp.where(hashgraph.is_empty_key(rq), 0, counts)
+    counts = _mask_counts(counts, rq, tombstones, layer_epoch)
     return exchange.combine(counts, route, axis_names, fill=jnp.int32(0))
+
+
+def query_layers_sharded(
+    layers: Sequence[DistributedHashGraph],
+    queries: jax.Array,
+    *,
+    tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+    **kw,
+) -> jax.Array:
+    """Merged multiplicity over a versioned stack of layers.
+
+    ``layers`` is ``(base, delta_1, ..., delta_L)`` — layer ``i`` has epoch
+    ``i``, so a tombstone stamped with epoch ``e`` hides layers ``0..e`` and
+    leaves later inserts visible (delete-then-reinsert works).
+    """
+    total = jnp.zeros(queries.shape[0], jnp.int32)
+    for epoch, layer in enumerate(layers):
+        total = total + query_sharded(
+            layer, queries, tombstones=tombstones, layer_epoch=epoch, **kw
+        )
+    return total
 
 
 def contains_sharded(
@@ -272,73 +332,122 @@ def _csr_gather_any(starts, counts, table, capacity: int, use_kernel: bool):
     return hashgraph.csr_gather(starts, counts, table, capacity)
 
 
-def _retrieve_parts(
+def _retrieve_runs(
     dhg: DistributedHashGraph,
     queries: jax.Array,
     *,
     seg_capacity: int,
-    out_capacity: int,
-    capacity_slack: float = 1.25,
-    use_kernel: Optional[bool] = None,
+    capacity_slack: float,
+    use_kernel: bool,
+    tombstones: Optional[tuple[jax.Array, jax.Array]],
+    layer_epoch: int,
 ):
-    """Shared two-pass distributed retrieval; returns the final local CSR.
+    """One layer's owner-side gather + return trip.
 
     Pass 1 (count): route queries to owning shards by the build splits and
     locate each routed query's contiguous match run in the local CSR.
     Pass 2 (gather): each owner prefix-sums the run lengths *per source
     block* and gathers the matched values into one static segment per source
-    (the HashGraph build idiom applied to results), then a reverse
-    all-to-all returns segments and run lengths to the querying shard, which
-    compacts them into its local output CSR.
+    (the HashGraph build idiom applied to results) — a single fused Pallas
+    launch over all sources on the kernel path — then a reverse all-to-all
+    returns segments and run lengths to the querying shard.
 
-    ``use_kernel`` selects the Pallas ``csr_gather`` kernel for both gather
-    stages (None = auto: on for TPU, jnp elsewhere).
+    Returns ``(counts, starts, seg_flat, dropped)`` in the querier's local
+    row order: row ``i``'s values are
+    ``seg_flat[starts[i] : starts[i] + counts[i]]``.
     """
     axis_names = dhg.axis_names
-    n_local = queries.shape[0]
     num_devices = exchange.device_count(axis_names)
-    use_kernel = _use_kernel_default(use_kernel)
-    rank = exchange.my_rank(axis_names)
 
     rq, route, rbuckets, capacity = _route_queries(dhg, queries, capacity_slack)
     run_starts, run_counts = hashgraph.query_locate(dhg.local, rq, buckets=rbuckets)
-    run_counts = jnp.where(hashgraph.is_empty_key(rq), 0, run_counts)
+    run_counts = _mask_counts(run_counts, rq, tombstones, layer_epoch)
 
     # Owner side: one packed segment of matched values per source device.
     starts_b = run_starts.reshape(num_devices, capacity)
     counts_b = run_counts.reshape(num_devices, capacity)
     if use_kernel:
-        # Static per-source loop: the kernel is invoked once per source
-        # block (grid-parallel internally) instead of vmapping pallas_call.
-        segs, seg_drops = [], []
-        for s in range(num_devices):
-            _, _, g, dr = _csr_gather_any(
-                starts_b[s], counts_b[s], dhg.local.values, seg_capacity, True
-            )
-            segs.append(g)
-            seg_drops.append(dr)
-        seg_values = jnp.stack(segs)
-        owner_dropped = jnp.sum(jnp.stack(seg_drops))
+        from repro.kernels import ops as kernel_ops
+
+        # Fused launch: one grid over (sources, capacity tiles) instead of
+        # one pallas_call per source block.
+        _, _, seg_values, owner_dropped = kernel_ops.csr_gather_batched(
+            starts_b, counts_b, dhg.local.values, capacity=seg_capacity
+        )
     else:
         _, _, seg_values, seg_dropped = jax.vmap(
             lambda s, c: hashgraph.csr_gather(s, c, dhg.local.values, seg_capacity)
         )(starts_b, counts_b)
         owner_dropped = jnp.sum(seg_dropped)
 
-    # Querier side: segments + run lengths come home; compact to local CSR.
+    # Querier side: segments + run lengths come home.
     counts, starts, seg_flat = exchange.combine_ragged(
         seg_values, run_counts, route, axis_names
     )
-    offsets, query_idx, values, out_dropped = _csr_gather_any(
-        starts, counts, seg_flat, out_capacity, use_kernel
+    return counts, starts, seg_flat, owner_dropped + route.num_dropped
+
+
+def _retrieve_parts(
+    layers: Sequence[DistributedHashGraph],
+    queries: jax.Array,
+    *,
+    seg_capacity: int,
+    out_capacity: int,
+    capacity_slack: float = 1.25,
+    use_kernel: Optional[bool] = None,
+    tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+):
+    """Merged two-pass retrieval over a layer stack; returns the local CSR.
+
+    Runs :func:`_retrieve_runs` per layer (base epoch 0, delta ``i`` epoch
+    ``i``), then compacts all layers' returned runs into one output CSR in a
+    single gather: the per-layer ``(start, count)`` run descriptors are
+    interleaved query-major — rows ``(q*L .. q*L+L-1)`` of the gather are
+    query ``q``'s runs in layer order — so the standard ``csr_gather``
+    produces the merged values array directly and every L-th offset is the
+    per-query merged offset.
+
+    ``use_kernel`` selects the Pallas ``csr_gather`` kernel for both gather
+    stages (None = auto: on for TPU, jnp elsewhere).
+    """
+    layers = tuple(layers)
+    nlayers = len(layers)
+    axis_names = layers[0].axis_names
+    n_local = queries.shape[0]
+    use_kernel = _use_kernel_default(use_kernel)
+    rank = exchange.my_rank(axis_names)
+
+    counts_l, starts_l, segs_l = [], [], []
+    dropped = jnp.int32(0)
+    for epoch, layer in enumerate(layers):
+        counts, starts, seg_flat, drop = _retrieve_runs(
+            layer,
+            queries,
+            seg_capacity=seg_capacity,
+            capacity_slack=capacity_slack,
+            use_kernel=use_kernel,
+            tombstones=tombstones,
+            layer_epoch=epoch,
+        )
+        counts_l.append(counts)
+        starts_l.append(starts + epoch * seg_flat.shape[0])
+        segs_l.append(seg_flat)
+        dropped = dropped + drop
+
+    seg_all = segs_l[0] if nlayers == 1 else jnp.concatenate(segs_l, axis=0)
+    counts_il = jnp.stack(counts_l, axis=1).reshape(n_local * nlayers)
+    starts_il = jnp.stack(starts_l, axis=1).reshape(n_local * nlayers)
+    offsets_il, slot_rows, values, out_dropped = _csr_gather_any(
+        starts_il, counts_il, seg_all, out_capacity, use_kernel
     )
-    # Overflow indicator, not an exact loss count: the three stages can
+    offsets = offsets_il[::nlayers]  # every L-th interleaved offset
+    counts = counts_il.reshape(n_local, nlayers).sum(axis=1).astype(jnp.int32)
+    query_idx = jnp.where(slot_rows >= 0, slot_rows // nlayers, jnp.int32(-1))
+    # Overflow indicator, not an exact loss count: the stages can
     # double-count one missing result (owner segment + querier output), and
-    # route.num_dropped counts lost query *rows* whose result count is
-    # unknown.  Zero iff nothing anywhere was truncated.
-    num_dropped = jax.lax.psum(
-        owner_dropped + out_dropped + route.num_dropped, axis_names
-    )
+    # route drops count lost query *rows* whose result count is unknown.
+    # Zero iff nothing anywhere was truncated.
+    num_dropped = jax.lax.psum(dropped + out_dropped, axis_names)
     return offsets, query_idx, values, counts, num_dropped, rank, n_local
 
 
@@ -356,13 +465,40 @@ def retrieve_sharded(
     Returns this device's :class:`ShardRetrieval` CSR over its ``queries``.
     Call inside ``shard_map``.
     """
-    offsets, _, values, counts, num_dropped, _, _ = _retrieve_parts(
-        dhg,
+    return retrieve_layers_sharded(
+        (dhg,),
         queries,
         seg_capacity=seg_capacity,
         out_capacity=out_capacity,
         capacity_slack=capacity_slack,
         use_kernel=use_kernel,
+    )
+
+
+def retrieve_layers_sharded(
+    layers: Sequence[DistributedHashGraph],
+    queries: jax.Array,
+    *,
+    seg_capacity: int,
+    out_capacity: int,
+    capacity_slack: float = 1.25,
+    use_kernel: Optional[bool] = None,
+    tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+) -> ShardRetrieval:
+    """Merged retrieval over a versioned layer stack (base + deltas).
+
+    Per-query values concatenate layer runs in epoch order; tombstoned rows
+    are masked before the gather, so they consume no output capacity.  Call
+    inside ``shard_map``.
+    """
+    offsets, _, values, counts, num_dropped, _, _ = _retrieve_parts(
+        layers,
+        queries,
+        seg_capacity=seg_capacity,
+        out_capacity=out_capacity,
+        capacity_slack=capacity_slack,
+        use_kernel=use_kernel,
+        tombstones=tombstones,
     )
     return ShardRetrieval(
         offsets=offsets, values=values, counts=counts, num_dropped=num_dropped
@@ -382,13 +518,38 @@ def inner_join_sharded(
 
     Call inside ``shard_map``.
     """
-    _, query_idx, values, counts, num_dropped, rank, n_local = _retrieve_parts(
-        dhg,
+    return inner_join_layers_sharded(
+        (dhg,),
         queries,
         seg_capacity=seg_capacity,
         out_capacity=out_capacity,
         capacity_slack=capacity_slack,
         use_kernel=use_kernel,
+    )
+
+
+def inner_join_layers_sharded(
+    layers: Sequence[DistributedHashGraph],
+    queries: jax.Array,
+    *,
+    seg_capacity: int,
+    out_capacity: int,
+    capacity_slack: float = 1.25,
+    use_kernel: Optional[bool] = None,
+    tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+) -> ShardJoin:
+    """Materialized inner join against a versioned layer stack.
+
+    Call inside ``shard_map``.
+    """
+    _, query_idx, values, counts, num_dropped, rank, n_local = _retrieve_parts(
+        layers,
+        queries,
+        seg_capacity=seg_capacity,
+        out_capacity=out_capacity,
+        capacity_slack=capacity_slack,
+        use_kernel=use_kernel,
+        tombstones=tombstones,
     )
     globl = rank.astype(jnp.int32) * n_local + query_idx
     query_idx = jnp.where(query_idx >= 0, globl, jnp.int32(-1))
@@ -401,31 +562,115 @@ def inner_join_sharded(
     )
 
 
+def _plan_block_totals(
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    *,
+    capacity_slack: float,
+    tombstones: Optional[tuple[jax.Array, jax.Array]],
+    layer_epoch: int,
+) -> jax.Array:
+    """Owner-side result totals per source device for one layer: (D,) int32.
+
+    Entry ``s`` is the number of values this owner will return to source
+    ``s`` — exactly the quantity both capacity plans are built from.  Routes
+    queries exactly like :func:`_retrieve_runs` pass 1 (same splits, same
+    slack, so the same slot layout).
+    """
+    num_devices = exchange.device_count(dhg.axis_names)
+    rq, _, rbuckets, capacity = _route_queries(dhg, queries, capacity_slack)
+    _, run_counts = hashgraph.query_locate(dhg.local, rq, buckets=rbuckets)
+    run_counts = _mask_counts(run_counts, rq, tombstones, layer_epoch)
+    return jnp.sum(run_counts.reshape(num_devices, capacity), axis=1)
+
+
 def plan_seg_capacity_sharded(
     dhg: DistributedHashGraph,
     queries: jax.Array,
     *,
     capacity_slack: float = 1.25,
+    tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+    layer_epoch: int = 0,
 ) -> jax.Array:
     """Count-only planning round: the exact ``seg_capacity`` retrieval needs.
 
-    Routes queries exactly like :func:`_retrieve_parts` pass 1 (same splits,
-    same slack, so the same slot layout), sums each source block's match-run
-    lengths on the owner, and ``pmax``-reduces across the mesh: the result is
-    the smallest segment width for which no owner→querier return segment
+    ``pmax`` of the owner-side per-source totals across the mesh: the
+    smallest segment width for which no owner→querier return segment
     overflows.  This is the ROADMAP "ragged all-to-all" counts round — a
     cheap reduction instead of shipping ``seg_capacity``-padded value
     segments sized by worst-case guesses.  Returns a replicated () int32.
 
     Call inside ``shard_map``.
     """
-    axis_names = dhg.axis_names
-    num_devices = exchange.device_count(axis_names)
-    rq, _, rbuckets, capacity = _route_queries(dhg, queries, capacity_slack)
-    _, run_counts = hashgraph.query_locate(dhg.local, rq, buckets=rbuckets)
-    run_counts = jnp.where(hashgraph.is_empty_key(rq), 0, run_counts)
-    block_totals = jnp.sum(run_counts.reshape(num_devices, capacity), axis=1)
-    return jax.lax.pmax(jnp.max(block_totals).astype(jnp.int32), axis_names)
+    block_totals = _plan_block_totals(
+        dhg,
+        queries,
+        capacity_slack=capacity_slack,
+        tombstones=tombstones,
+        layer_epoch=layer_epoch,
+    )
+    return jax.lax.pmax(jnp.max(block_totals).astype(jnp.int32), dhg.axis_names)
+
+
+def plan_out_capacity_sharded(
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    *,
+    capacity_slack: float = 1.25,
+    tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+    layer_epoch: int = 0,
+) -> jax.Array:
+    """Count-first output sizing: the exact ``out_capacity`` retrieval needs.
+
+    ``psum`` of the owner-side per-source totals gives, per querying device,
+    the total number of values it will receive; the max over devices is the
+    smallest output CSR that fits every shard.  Same counts round as
+    :func:`plan_seg_capacity_sharded` — ``retrieve`` never needs a
+    worst-case output guess.  Returns a replicated () int32.
+
+    Call inside ``shard_map``.
+    """
+    block_totals = _plan_block_totals(
+        dhg,
+        queries,
+        capacity_slack=capacity_slack,
+        tombstones=tombstones,
+        layer_epoch=layer_epoch,
+    )
+    per_device = jax.lax.psum(block_totals, dhg.axis_names)  # (D,) replicated
+    return jnp.max(per_device).astype(jnp.int32)
+
+
+def plan_caps_sharded(
+    layers: Sequence[DistributedHashGraph],
+    queries: jax.Array,
+    *,
+    capacity_slack: float = 1.25,
+    tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One counts round sizing both retrieval capacities over a layer stack.
+
+    Returns replicated ``(seg_capacity, out_capacity)`` () int32 — the exact
+    per-segment and per-device output widths a merged
+    :func:`retrieve_layers_sharded` needs to drop nothing.  Call inside
+    ``shard_map``.
+    """
+    axis_names = tuple(layers[0].axis_names)
+    seg_need = jnp.int32(0)
+    out_vec = jnp.int32(0)
+    for epoch, layer in enumerate(layers):
+        block_totals = _plan_block_totals(
+            layer,
+            queries,
+            capacity_slack=capacity_slack,
+            tombstones=tombstones,
+            layer_epoch=epoch,
+        )
+        seg_need = jnp.maximum(seg_need, jnp.max(block_totals))
+        out_vec = out_vec + block_totals
+    seg = jax.lax.pmax(seg_need.astype(jnp.int32), axis_names)
+    out = jnp.max(jax.lax.psum(out_vec, axis_names)).astype(jnp.int32)
+    return seg, out
 
 
 def build_query_hashgraph_sharded(
@@ -454,3 +699,13 @@ def join_size_sharded(
     """
     counts = query_sharded(dhg, queries, **kw)
     return jax.lax.psum(jnp.sum(counts), dhg.axis_names)
+
+
+def join_size_layers_sharded(
+    layers: Sequence[DistributedHashGraph],
+    queries: jax.Array,
+    **kw,
+) -> jax.Array:
+    """Global inner-join cardinality against a versioned layer stack."""
+    counts = query_layers_sharded(layers, queries, **kw)
+    return jax.lax.psum(jnp.sum(counts), tuple(layers[0].axis_names))

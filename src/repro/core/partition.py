@@ -41,12 +41,21 @@ def bin_size_for(hash_range: int, num_bins: int) -> int:
 
 
 def local_bin_histogram(
-    buckets: jax.Array, num_bins: int, hash_range: int
+    buckets: jax.Array, num_bins: int, hash_range: int, valid: jax.Array = None
 ) -> jax.Array:
-    """Histogram of hash values into ``num_bins`` coarse bins (Alg. 2 l.6-8)."""
+    """Histogram of hash values into ``num_bins`` coarse bins (Alg. 2 l.6-8).
+
+    ``valid`` masks rows out of the count (padding sentinels in a compaction
+    rebuild must not skew the balanced splits).
+    """
     bsz = bin_size_for(hash_range, num_bins)
     bins = (buckets.astype(jnp.int32) // jnp.int32(bsz)).clip(0, num_bins - 1)
-    return jnp.zeros((num_bins,), jnp.int32).at[bins].add(1)
+    weights = (
+        jnp.ones(bins.shape, jnp.int32)
+        if valid is None
+        else valid.astype(jnp.int32)
+    )
+    return jnp.zeros((num_bins,), jnp.int32).at[bins].add(weights)
 
 
 def _balanced_targets(total: jax.Array, num_devices: int) -> jax.Array:

@@ -1,0 +1,311 @@
+"""Plan/execute API — pure, cache-keyed callables over versioned state.
+
+The eager table methods each hid a jit boundary and, for ``retrieve``/
+``inner_join`` with unplanned capacities, a device→host sync inside the
+call.  A *plan* hoists every static decision — output and segment
+capacities, query count, schema — to plan-build time:
+
+    plan = table.plan_retrieve(state, queries)        # counts round, syncs once
+    plan = table.plan_retrieve(num_queries=n,         # or fully explicit:
+                               out_capacity=4096, seg_capacity=512)
+    result = plan(state2, queries2)                   # pure; zero host syncs
+
+The returned callables are ``(state, queries) -> result`` pytree functions:
+they accept any :class:`~repro.core.state.TableState` (or bare
+``DistributedHashGraph``) with compatible shapes, and compose under an
+outer ``jax.jit`` —
+
+    @jax.jit
+    def program(keys, new_keys, dead_keys, queries):
+        state = table.init(keys)
+        state = state.insert(new_keys)
+        state = state.delete(dead_keys)
+        return plan(state, queries)
+
+— with no recompilation across calls: execution is cache-keyed by (table,
+static capacities, state structure) through ``jax.jit``'s cache, so
+repeated calls with shifting data reuse one compiled program per delta
+depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import multi_hashgraph
+from repro.core.hashgraph import HashGraph
+from repro.core.multi_hashgraph import (
+    DistributedHashGraph,
+    ShardJoin,
+    ShardRetrieval,
+)
+from repro.core.state import TableState, Tombstones, as_state
+from repro.utils.compat import shard_map
+
+
+# ---------------------------------------------------------------------------
+# shard_map spec builders — structure mirrors the pytrees, metadata copied
+# from the live values so treedefs match exactly.
+# ---------------------------------------------------------------------------
+
+
+def dhg_specs(dhg: DistributedHashGraph) -> DistributedHashGraph:
+    """Partition specs for one graph: local CSR sharded, splits replicated."""
+    ax = tuple(dhg.axis_names)
+    shard0 = P(ax)  # stack local shards along dim 0 in the global view
+    local = HashGraph(
+        offsets=shard0,
+        keys=shard0,
+        values=shard0,
+        table_size=dhg.local.table_size,
+        seed=dhg.local.seed,
+        sorted_within_bucket=dhg.local.sorted_within_bucket,
+    )
+    return DistributedHashGraph(
+        local=local,
+        hash_splits=P(),  # identical on every device
+        num_dropped=P(),
+        hash_range=dhg.hash_range,
+        seed=dhg.seed,
+        local_range_cap=dhg.local_range_cap,
+        axis_names=ax,
+    )
+
+
+def state_specs(state: TableState) -> TableState:
+    """Partition specs for a whole :class:`TableState` pytree."""
+    return TableState(
+        base=dhg_specs(state.base),
+        deltas=tuple(dhg_specs(d) for d in state.deltas),
+        tombstones=Tombstones(keys=P(), epochs=P(), count=P(), num_dropped=P()),
+        table=state.table,
+    )
+
+
+# ---------------------------------------------------------------------------
+# jitted executors — the pure (state, queries) -> result programs plans bind.
+# ``table`` is a static arg (identity-hashed config), so each (table, caps,
+# state structure) triple compiles once and is reused by every plan call.
+# ---------------------------------------------------------------------------
+
+
+def _in_spec(table):
+    return P(tuple(table.axis_names))
+
+
+@partial(jax.jit, static_argnums=(0,))
+def exec_query(table, state: TableState, queries: jax.Array) -> jax.Array:
+    """Merged multiplicity per query over base + deltas − tombstones."""
+
+    def body(st, q):
+        return multi_hashgraph.query_layers_sharded(
+            st.layers,
+            q,
+            tombstones=st.tombstones.as_mask_args(),
+            capacity_slack=table.capacity_slack,
+            paper_faithful_probe=table.paper_faithful_probe,
+            max_probe=table.max_probe,
+        )
+
+    return shard_map(
+        body,
+        mesh=table.mesh,
+        in_specs=(state_specs(state), _in_spec(table)),
+        out_specs=_in_spec(table),
+        check_vma=False,
+    )(state, queries)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def exec_join_size(table, state: TableState, queries: jax.Array) -> jax.Array:
+    """Global join cardinality over the versioned stack (replicated ())."""
+
+    def body(st, q):
+        return multi_hashgraph.join_size_layers_sharded(
+            st.layers,
+            q,
+            tombstones=st.tombstones.as_mask_args(),
+            capacity_slack=table.capacity_slack,
+            paper_faithful_probe=table.paper_faithful_probe,
+            max_probe=table.max_probe,
+        )
+
+    return shard_map(
+        body,
+        mesh=table.mesh,
+        in_specs=(state_specs(state), _in_spec(table)),
+        out_specs=P(),
+        check_vma=False,
+    )(state, queries)
+
+
+@partial(
+    jax.jit, static_argnums=(0,), static_argnames=("out_capacity", "seg_capacity")
+)
+def exec_retrieve(
+    table,
+    state: TableState,
+    queries: jax.Array,
+    *,
+    out_capacity: int,
+    seg_capacity: int,
+) -> ShardRetrieval:
+    """Merged CSR retrieval over the versioned stack."""
+    ax = tuple(table.axis_names)
+    out_specs = ShardRetrieval(
+        offsets=P(ax), values=P(ax), counts=P(ax), num_dropped=P()
+    )
+
+    def body(st, q):
+        return multi_hashgraph.retrieve_layers_sharded(
+            st.layers,
+            q,
+            seg_capacity=seg_capacity,
+            out_capacity=out_capacity,
+            capacity_slack=table.capacity_slack,
+            use_kernel=table.use_kernel,
+            tombstones=st.tombstones.as_mask_args(),
+        )
+
+    return shard_map(
+        body,
+        mesh=table.mesh,
+        in_specs=(state_specs(state), _in_spec(table)),
+        out_specs=out_specs,
+        check_vma=False,
+    )(state, queries)
+
+
+@partial(
+    jax.jit, static_argnums=(0,), static_argnames=("out_capacity", "seg_capacity")
+)
+def exec_join(
+    table,
+    state: TableState,
+    queries: jax.Array,
+    *,
+    out_capacity: int,
+    seg_capacity: int,
+) -> ShardJoin:
+    """Materialized inner join over the versioned stack."""
+    ax = tuple(table.axis_names)
+    out_specs = ShardJoin(
+        query_idx=P(ax), values=P(ax), num_results=P(ax), num_dropped=P()
+    )
+
+    def body(st, q):
+        return multi_hashgraph.inner_join_layers_sharded(
+            st.layers,
+            q,
+            seg_capacity=seg_capacity,
+            out_capacity=out_capacity,
+            capacity_slack=table.capacity_slack,
+            use_kernel=table.use_kernel,
+            tombstones=st.tombstones.as_mask_args(),
+        )
+
+    return shard_map(
+        body,
+        mesh=table.mesh,
+        in_specs=(state_specs(state), _in_spec(table)),
+        out_specs=out_specs,
+        check_vma=False,
+    )(state, queries)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def exec_plan_caps(table, state: TableState, queries: jax.Array):
+    """The one counts round sizing both capacities: ((), ()) int32."""
+
+    def body(st, q):
+        return multi_hashgraph.plan_caps_sharded(
+            st.layers,
+            q,
+            capacity_slack=table.capacity_slack,
+            tombstones=st.tombstones.as_mask_args(),
+        )
+
+    return shard_map(
+        body,
+        mesh=table.mesh,
+        in_specs=(state_specs(state), _in_spec(table)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )(state, queries)
+
+
+# ---------------------------------------------------------------------------
+# Plans — small frozen descriptors binding a table to resolved statics.
+# ---------------------------------------------------------------------------
+
+
+class _PlanBase:
+    def _prep(self, state, queries):
+        st = as_state(self.table, state)
+        q = self.table.schema.pack_keys(queries)
+        if self.num_queries is not None and q.shape[0] != self.num_queries:
+            raise ValueError(
+                f"plan was built for {self.num_queries} queries, got {q.shape[0]}"
+            )
+        return st, q
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan(_PlanBase):
+    """``(state, queries) -> (Nq,) int32`` merged multiplicities."""
+
+    table: object
+    num_queries: Optional[int] = None
+
+    def __call__(self, state, queries) -> jax.Array:
+        st, q = self._prep(state, queries)
+        return exec_query(self.table, st, q)
+
+    def join_size(self, state, queries) -> jax.Array:
+        """Global join cardinality under the same plan (replicated ())."""
+        st, q = self._prep(state, queries)
+        return exec_join_size(self.table, st, q)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievePlan(_PlanBase):
+    """``(state, queries) -> ShardRetrieval`` with capacities fixed."""
+
+    table: object
+    num_queries: Optional[int]
+    out_capacity: int
+    seg_capacity: int
+
+    def __call__(self, state, queries) -> ShardRetrieval:
+        st, q = self._prep(state, queries)
+        return exec_retrieve(
+            self.table,
+            st,
+            q,
+            out_capacity=self.out_capacity,
+            seg_capacity=self.seg_capacity,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinPlan(_PlanBase):
+    """``(state, queries) -> ShardJoin`` with capacities fixed."""
+
+    table: object
+    num_queries: Optional[int]
+    out_capacity: int
+    seg_capacity: int
+
+    def __call__(self, state, queries) -> ShardJoin:
+        st, q = self._prep(state, queries)
+        return exec_join(
+            self.table,
+            st,
+            q,
+            out_capacity=self.out_capacity,
+            seg_capacity=self.seg_capacity,
+        )

@@ -1,0 +1,170 @@
+"""Versioned functional table state — base graph + delta ring + tombstones.
+
+The paper's CSR HashGraph is build-once; this module turns it into a
+mutable-by-value table in the LSM style:
+
+* ``base`` — the big :class:`~repro.core.multi_hashgraph.DistributedHashGraph`
+  from the last full build/compaction (epoch 0).
+* ``deltas`` — a bounded ring of small DistributedHashGraphs, one per
+  ``insert`` batch; the ``i``-th delta (0-based) has epoch ``i + 1``.
+* ``tombstones`` — a fixed-capacity buffer of deleted keys, each stamped
+  with the number of deltas that existed when the delete was issued.  A
+  tombstone with epoch ``e`` hides matching rows in every layer with epoch
+  ``<= e`` (everything that existed at delete time) and leaves later
+  inserts visible — so delete-then-reinsert behaves like a real table.
+
+``TableState`` is a pytree: ``insert``/``delete`` return a *new* state (the
+old one stays valid), and every operation is traceable under an outer
+``jax.jit`` — the delta count and tombstone capacity are static structure.
+``compact()`` folds deltas + tombstones into a fresh base via a rebuild and
+resets the ring.
+
+The mesh-level mutation ops live on
+:class:`~repro.core.table.DistributedHashTable` (which owns the mesh and the
+jitted shard_maps); the methods here are convenience forwarders through the
+``table`` reference carried in the pytree's static metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import TYPE_CHECKING, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashgraph import EMPTY_KEY, match_epochs
+from repro.core.multi_hashgraph import DistributedHashGraph
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
+    from repro.core.table import DistributedHashTable
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("keys", "epochs", "count", "num_dropped"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class Tombstones:
+    """Fixed-capacity delete buffer, replicated on every device.
+
+    Unused slots hold the EMPTY sentinel with epoch ``-1`` (matched by
+    nothing).  ``num_dropped`` counts deletes that overflowed the buffer —
+    reported, never silent, same contract as every other static capacity in
+    the stack.
+    """
+
+    keys: jax.Array  # (T,) uint32 or (T, L) packed lanes
+    epochs: jax.Array  # (T,) int32, -1 in unused slots
+    count: jax.Array  # () int32 — used slots
+    num_dropped: jax.Array  # () int32 — deletes lost to capacity
+
+    @property
+    def capacity(self) -> int:
+        return int(self.keys.shape[0])
+
+    def epoch_of(self, keys: jax.Array) -> jax.Array:
+        """Newest tombstone epoch matching each key (-1 where none)."""
+        return match_epochs(keys, self.keys, self.epochs)
+
+    def push(self, keys: jax.Array, epoch: int) -> "Tombstones":
+        """Append ``keys`` stamped with ``epoch``; overflow is counted."""
+        n = keys.shape[0]
+        idx = self.count + jnp.arange(n, dtype=jnp.int32)
+        overflow = jnp.maximum(self.count + n - self.capacity, 0)
+        return Tombstones(
+            keys=self.keys.at[idx].set(keys, mode="drop"),
+            epochs=self.epochs.at[idx].set(jnp.int32(epoch), mode="drop"),
+            count=jnp.minimum(self.count + n, self.capacity).astype(jnp.int32),
+            num_dropped=(self.num_dropped + overflow).astype(jnp.int32),
+        )
+
+    def as_mask_args(self) -> tuple[jax.Array, jax.Array]:
+        """The ``(ts_keys, ts_epochs)`` pair the sharded query paths take."""
+        return self.keys, self.epochs
+
+
+def empty_tombstones(capacity: int, key_lanes: int = 1) -> Tombstones:
+    """An all-empty tombstone buffer for the given schema width."""
+    shape = (capacity,) if key_lanes == 1 else (capacity, key_lanes)
+    return Tombstones(
+        keys=jnp.full(shape, EMPTY_KEY, jnp.uint32),
+        epochs=jnp.full((capacity,), -1, jnp.int32),
+        count=jnp.int32(0),
+        num_dropped=jnp.int32(0),
+    )
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("base", "deltas", "tombstones"),
+    meta_fields=("table",),
+)
+@dataclasses.dataclass(frozen=True)
+class TableState:
+    """Immutable snapshot of a mutable distributed table.
+
+    ``insert``/``delete``/``compact`` return new snapshots; plans built by
+    :meth:`DistributedHashTable.plan_query` / ``plan_retrieve`` /
+    ``plan_join`` execute against any snapshot with compatible shapes.  The
+    ``table`` reference is static pytree metadata (the config that owns the
+    mesh and jit caches), so ``state.insert(...)`` composes under an outer
+    ``jax.jit`` exactly like ``table.insert(state, ...)``.
+    """
+
+    base: DistributedHashGraph
+    deltas: tuple  # tuple[DistributedHashGraph, ...] — delta ring, epoch i+1
+    tombstones: Tombstones
+    table: "DistributedHashTable"  # static metadata
+
+    @property
+    def epoch(self) -> int:
+        """Current insert epoch == number of live deltas (static)."""
+        return len(self.deltas)
+
+    @property
+    def layers(self) -> tuple:
+        """``(base, *deltas)`` — layer ``i`` has epoch ``i``."""
+        return (self.base,) + tuple(self.deltas)
+
+    @property
+    def num_dropped(self) -> jax.Array:
+        """Total overflow across base build, delta builds, and tombstones."""
+        total = self.base.num_dropped + self.tombstones.num_dropped
+        for d in self.deltas:
+            total = total + d.num_dropped
+        return total
+
+    # -- functional mutation (forwarders to the owning table) ---------------
+    def insert(self, keys, values=None) -> "TableState":
+        """New state with one more delta holding ``keys``/``values``."""
+        return self.table.insert(self, keys, values)
+
+    def delete(self, keys) -> "TableState":
+        """New state with ``keys`` tombstoned at the current epoch."""
+        return self.table.delete(self, keys)
+
+    def compact(self, capacity: Optional[int] = None) -> "TableState":
+        """Fold deltas + tombstones into a fresh base; reset the ring."""
+        return self.table.compact(self, capacity=capacity)
+
+
+def as_state(table: "DistributedHashTable", state) -> TableState:
+    """Lift a bare :class:`DistributedHashGraph` (the pre-plan API's state)
+    into a delta-free :class:`TableState`; pass ``TableState`` through."""
+    if isinstance(state, TableState):
+        return state
+    if isinstance(state, DistributedHashGraph):
+        # Zero-capacity tombstone buffer: legacy eager call sites pay no
+        # masking cost (match_epochs early-outs on an empty buffer); the
+        # buffer grows to table.tombstone_capacity on first delete().
+        return TableState(
+            base=state,
+            deltas=(),
+            tombstones=empty_tombstones(0, table.schema.key_lanes),
+            table=table,
+        )
+    raise TypeError(
+        f"expected TableState or DistributedHashGraph, got {type(state).__name__}"
+    )

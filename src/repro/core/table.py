@@ -4,16 +4,27 @@ Wraps the shard_map internals of ``repro.core.multi_hashgraph`` behind a
 simple object: callers hold *global* jax arrays (sharded over a mesh) and
 get back global arrays; all paper phases run inside one jitted shard_map.
 
-    table = DistributedHashTable(mesh, axis_names=("data", "model"), hash_range=1 << 20)
-    state = table.build(keys)            # keys: (N,) uint32, N % devices == 0
-    counts = table.query(state, queries) # multiplicity per query key
-    size = table.join_size(state, queries)
+The current API is **plan/execute over versioned state** (see
+``repro.core.plans`` / ``repro.core.state``):
+
+    table = DistributedHashTable(mesh, ("d",), hash_range=1 << 20)
+    state = table.init(keys)                   # TableState (versioned)
+    state = state.insert(new_keys)             # functional delta insert
+    state = state.delete(dead_keys)            # tombstone delete
+    plan = table.plan_retrieve(state, queries)  # capacities sized up front
+    result = plan(state, queries)              # pure, jit-composable
+    state = state.compact()                    # fold deltas + tombstones
 
 The key width and payload shape are set by a :class:`~repro.core.schema.
 TableSchema`: the default (uint32 keys, one int32 value column) is the
 paper's layout and the exact PR-1 API; ``TableSchema("uint64", C)`` stores
 keys as ``(N, 2)`` packed uint32 lanes (``schema.pack_u64``) and values as
 ``(N, C)`` int32 columns, threaded through every phase of the pipeline.
+
+The pre-plan eager methods (``build``/``query``/``retrieve``/``inner_join``
+…) remain as thin deprecation shims over the plan executors, accepting
+either a bare ``DistributedHashGraph`` (their old state type) or a
+``TableState``.
 """
 from __future__ import annotations
 
@@ -28,14 +39,16 @@ from repro.utils.compat import shard_map
 
 import numpy as np
 
-from repro.core import hashing, multi_hashgraph
-from repro.core.hashgraph import HashGraph
+from repro.core import hashing, multi_hashgraph, plans
+from repro.core.hashgraph import EMPTY_KEY, HashGraph, is_empty_key, match_epochs
 from repro.core.multi_hashgraph import (
     DistributedHashGraph,
     ShardJoin,
     ShardRetrieval,
 )
+from repro.core.plans import JoinPlan, QueryPlan, RetrievePlan
 from repro.core.schema import TableSchema
+from repro.core.state import TableState, as_state, empty_tombstones
 from repro.utils import cdiv as _cdiv
 
 
@@ -63,12 +76,14 @@ def _dhg_out_specs(axis_names: Sequence[str], hash_range: int, local_cap: int, s
 
 @dataclasses.dataclass(eq=False)  # identity hash — required for jit static self
 class DistributedHashTable:
-    """Factory for jitted build/query closures over a fixed mesh.
+    """Factory for jitted build/mutate/plan closures over a fixed mesh.
 
     ``schema`` selects key width and payload columns (default: the paper's
     uint32 keys + one int32 column).  ``use_kernel`` routes the retrieval
     gather through the Pallas ``csr_gather`` kernel (None = auto: on for
-    TPU, jnp path elsewhere).
+    TPU, jnp path elsewhere).  ``max_deltas`` bounds the insert delta ring
+    and ``tombstone_capacity`` the delete buffer of the versioned state
+    (see :class:`~repro.core.state.TableState`).
     """
 
     mesh: jax.sharding.Mesh
@@ -82,6 +97,8 @@ class DistributedHashTable:
     max_probe: int = 64
     schema: Optional[TableSchema] = None
     use_kernel: Optional[bool] = None
+    max_deltas: int = 8
+    tombstone_capacity: int = 1024
 
     def __post_init__(self):
         self.axis_names = tuple(self.axis_names)
@@ -106,14 +123,27 @@ class DistributedHashTable:
     def _pack_queries(self, queries) -> jax.Array:
         return self.schema.pack_keys(queries)
 
+    def _local_cap_for(self, hash_range: int) -> int:
+        return int(_cdiv(hash_range, self.num_devices) * self.range_slack)
+
+    def _out_specs(self, hash_range: Optional[int] = None):
+        hr = self.hash_range if hash_range is None else hash_range
+        return _dhg_out_specs(
+            self.axis_names, hr, self._local_cap_for(hr), self.seed
+        )
+
     # -- build ----------------------------------------------------------------
-    def build(self, keys, values=None):
-        """Build the distributed table from a global key array.
+    def build(self, keys, values=None) -> DistributedHashGraph:
+        """Build a (build-once) distributed graph from a global key array.
 
         ``keys``: ``(N,)`` uint32 for the 1-lane schema, ``(N, 2)`` packed
         uint32 (``schema.pack_u64``) for uint64; ``N % devices == 0``.
         ``values``: optional ``(N,)`` / ``(N, C)`` int32 payload matching
         ``schema.value_cols`` (default: global row ids, 1-column only).
+
+        .. deprecated:: use :meth:`init`, which returns a versioned
+           :class:`TableState` supporting insert/delete/compact.  ``build``
+           returns the bare ``DistributedHashGraph`` for older call sites.
         """
         keys = self.schema.pack_keys(keys)
         if values is None:
@@ -122,141 +152,374 @@ class DistributedHashTable:
                     f"schema has {self.schema.value_cols} value columns; "
                     "pass explicit values (the row-id default is 1-column)"
                 )
-            return self._build_jit(keys)
-        return self._build_values_jit(keys, self.schema.pack_values(values))
+            return self._build_jit(keys, hash_range=self.hash_range)
+        return self._build_values_jit(
+            keys, self.schema.pack_values(values), hash_range=self.hash_range
+        )
 
-    def _build_body(self, k, v):
+    def init(self, keys, values=None) -> TableState:
+        """Build and wrap into a versioned :class:`TableState`.
+
+        The state starts with an empty delta ring and a zero-capacity
+        tombstone buffer (pure-read states pay no masking cost); the buffer
+        grows to ``tombstone_capacity`` slots on the first ``delete``.
+        ``state.insert`` / ``state.delete`` / ``state.compact`` are
+        functional (each returns a new state) and composable under an outer
+        ``jax.jit``.
+        """
+        return TableState(
+            base=self.build(keys, values),
+            deltas=(),
+            tombstones=empty_tombstones(0, self.schema.key_lanes),
+            table=self,
+        )
+
+    def _build_body(self, k, v, hash_range, num_bins, capacity):
         return multi_hashgraph.build_sharded(
             k,
-            hash_range=self.hash_range,
+            hash_range=hash_range,
             axis_names=self.axis_names,
             values=v,
-            num_bins=self.num_bins,
+            num_bins=num_bins,
             capacity_slack=self.capacity_slack,
             range_slack=self.range_slack,
             seed=self.seed,
+            capacity=capacity,
         )
 
-    def _out_specs(self):
-        return _dhg_out_specs(
-            self.axis_names, self.hash_range, self.local_range_cap, self.seed
-        )
+    def _num_bins_for(self, hash_range: int) -> Optional[int]:
+        # A user-pinned bin count is sized for the table's hash range; delta
+        # builds over a narrowed range fall back to the auto choice.
+        return self.num_bins if hash_range == self.hash_range else None
 
-    @partial(jax.jit, static_argnums=0)
-    def _build_jit(self, keys: jax.Array):
+    @partial(jax.jit, static_argnums=0, static_argnames=("hash_range", "capacity"))
+    def _build_jit(
+        self, keys: jax.Array, *, hash_range: int, capacity: Optional[int] = None
+    ):
         return shard_map(
-            lambda k: self._build_body(k, None),
+            lambda k: self._build_body(
+                k, None, hash_range, self._num_bins_for(hash_range), capacity
+            ),
             mesh=self.mesh,
             in_specs=(self._in_spec(),),
-            out_specs=self._out_specs(),
+            out_specs=self._out_specs(hash_range),
             check_vma=False,
         )(keys)
 
-    @partial(jax.jit, static_argnums=0)
-    def _build_values_jit(self, keys: jax.Array, values: jax.Array):
+    @partial(jax.jit, static_argnums=0, static_argnames=("hash_range", "capacity"))
+    def _build_values_jit(
+        self,
+        keys: jax.Array,
+        values: jax.Array,
+        *,
+        hash_range: int,
+        capacity: Optional[int] = None,
+    ):
         return shard_map(
-            self._build_body,
+            lambda k, v: self._build_body(
+                k, v, hash_range, self._num_bins_for(hash_range), capacity
+            ),
             mesh=self.mesh,
             in_specs=(self._in_spec(), self._in_spec()),
-            out_specs=self._out_specs(),
+            out_specs=self._out_specs(hash_range),
             check_vma=False,
         )(keys, values)
 
-    # -- query ----------------------------------------------------------------
-    def query(self, state: DistributedHashGraph, queries) -> jax.Array:
-        """Multiplicity of each global query key. Returns (Nq,) int32."""
-        return self._query_jit(state, self._pack_queries(queries))
+    # -- functional mutation (versioned state) --------------------------------
+    def _delta_hash_range(self, num_keys: int) -> int:
+        """Hash range for a delta graph: sized to the batch, not the table.
 
-    @partial(jax.jit, static_argnums=0)
-    def _query_jit(self, state: DistributedHashGraph, queries: jax.Array) -> jax.Array:
-        def body(dhg, q):
-            return multi_hashgraph.query_sharded(
-                dhg,
-                q,
-                capacity_slack=self.capacity_slack,
-                paper_faithful_probe=self.paper_faithful_probe,
-                max_probe=self.max_probe,
+        Each delta owns its own splits and bucket space, so a small insert
+        does not pay the base table's O(hash_range / devices) offsets array.
+        """
+        return min(self.hash_range, max(256, 2 * num_keys))
+
+    def insert(self, state, keys, values=None) -> TableState:
+        """Functional insert: a new state with one more delta graph.
+
+        ``keys``/``values`` follow the :meth:`build` contract (global
+        arrays, ``N % devices == 0``).  Raises when the delta ring is full —
+        call :meth:`compact` first.  With ``values=None`` the default
+        payload is the row id *within this batch* (0..N-1).
+        """
+        st = as_state(self, state)
+        if len(st.deltas) >= self.max_deltas:
+            raise RuntimeError(
+                f"delta ring full ({self.max_deltas} deltas); call compact() "
+                "to fold deltas into the base before inserting more"
+            )
+        keys = self.schema.pack_keys(keys)
+        dhr = self._delta_hash_range(keys.shape[0])
+        if values is None:
+            if self.schema.value_cols != 1:
+                raise ValueError(
+                    f"schema has {self.schema.value_cols} value columns; "
+                    "pass explicit values (the row-id default is 1-column)"
+                )
+            delta = self._build_jit(keys, hash_range=dhr)
+        else:
+            delta = self._build_values_jit(
+                keys, self.schema.pack_values(values), hash_range=dhr
+            )
+        return dataclasses.replace(st, deltas=st.deltas + (delta,))
+
+    def delete(self, state, keys) -> TableState:
+        """Functional delete: tombstone every current occurrence of ``keys``.
+
+        The tombstones are stamped with the current epoch, hiding matches in
+        the base and in every delta inserted so far; keys re-inserted
+        *after* the delete are visible again.  ``keys`` is a replicated
+        (unsharded) array of any length; overflow past
+        ``tombstone_capacity`` is counted in ``state.num_dropped``.
+        """
+        st = as_state(self, state)
+        if st.tombstones.capacity == 0:
+            # Legacy states lifted from a bare graph carry a zero-capacity
+            # buffer (zero masking cost); grow it on first delete.
+            st = dataclasses.replace(
+                st,
+                tombstones=empty_tombstones(
+                    self.tombstone_capacity, self.schema.key_lanes
+                ),
+            )
+        keys = self.schema.pack_keys(keys)
+        return dataclasses.replace(
+            st, tombstones=st.tombstones.push(keys, epoch=len(st.deltas))
+        )
+
+    def compact(self, state, *, capacity: Optional[int] = None) -> TableState:
+        """Fold base + deltas − tombstones into a fresh base; reset the ring.
+
+        Pure rebuild (jit-composable): every layer's stored rows are masked
+        to the EMPTY sentinel where tombstoned, concatenated live-rows-first,
+        and pushed through the standard four-phase build.  ``capacity``
+        overrides the per-destination slot size of the rebuild exchange (the
+        default allows for the worst case of every row live, so the new
+        base's arrays are ≈(1 + slack)× the concatenated layer capacity —
+        pass a tighter value when most rows are known dead).
+        """
+        st = as_state(self, state)
+        # Per-DEVICE concatenated row count: layer arrays are global views,
+        # the rebuild exchange sees one shard of each.
+        n_cat = sum(layer.local.keys.shape[0] for layer in st.layers)
+        n_cat_local = _cdiv(n_cat, self.num_devices)
+        if capacity is None:
+            # Balanced share of the worst case (all rows live) plus a full
+            # round-robin allowance for the sentinel rows.
+            capacity = multi_hashgraph.default_capacity(
+                n_cat_local, self.num_devices, self.capacity_slack
+            ) + _cdiv(n_cat_local, self.num_devices)
+        capacity = _cdiv(capacity, 8) * 8
+        new_base = self._compact_jit(st, capacity=capacity)
+        return TableState(
+            base=new_base,
+            deltas=(),
+            tombstones=empty_tombstones(0, self.schema.key_lanes),
+            table=self,
+        )
+
+    @partial(jax.jit, static_argnums=0, static_argnames=("capacity",))
+    def _compact_jit(self, state: TableState, *, capacity: int):
+        from repro.core import exchange
+
+        def body(st):
+            ts_keys, ts_epochs = st.tombstones.as_mask_args()
+            keys_parts, vals_parts = [], []
+            for epoch, layer in enumerate(st.layers):
+                k = layer.local.keys
+                hidden = match_epochs(k, ts_keys, ts_epochs) >= epoch
+                dead = is_empty_key(k) | hidden
+                dead_b = dead[:, None] if k.ndim == 2 else dead
+                keys_parts.append(jnp.where(dead_b, jnp.uint32(EMPTY_KEY), k))
+                vals_parts.append(layer.local.values)
+            keys_cat = jnp.concatenate(keys_parts, axis=0)
+            vals_cat = jnp.concatenate(vals_parts, axis=0)
+            # Pre-balance: the base layer is hash-partitioned, so rebuilding
+            # directly would route every device's live rows to ONE owner and
+            # the per-pair slot would need to hold a whole device's rows.  A
+            # deterministic round-robin all_to_all first deals every D-th
+            # row to each peer — STRIDED, not contiguous: live rows cluster
+            # at the front of the bucket-sorted shards, so contiguous chunks
+            # would re-concentrate them on one receiver — making both the
+            # receivers' live loads and the rebuild's destination
+            # distribution uniform (~n/D per pair).
+            d = self.num_devices
+            chunk = _cdiv(keys_cat.shape[0], d)
+            pad = chunk * d - keys_cat.shape[0]
+            if pad:
+                keys_cat = jnp.concatenate(
+                    [
+                        keys_cat,
+                        jnp.full((pad,) + keys_cat.shape[1:], EMPTY_KEY, jnp.uint32),
+                    ]
+                )
+                vals_cat = jnp.concatenate(
+                    [vals_cat, jnp.full((pad,) + vals_cat.shape[1:], -1, jnp.int32)]
+                )
+
+            def deal(x):
+                # row i -> peer i % D (strided deal), then one all_to_all
+                stripes = x.reshape(chunk, d, *x.shape[1:]).swapaxes(0, 1)
+                mixed = exchange.all_to_all_hierarchical(stripes, self.axis_names)
+                return mixed.reshape(d * chunk, *x.shape[1:])
+
+            keys_cat = deal(keys_cat)
+            vals_cat = deal(vals_cat)
+            # Live rows first: exchange-capacity drops hit sentinels before
+            # any real key (pack order within a destination is stable).
+            order = jnp.argsort(is_empty_key(keys_cat).astype(jnp.int32), stable=True)
+            return self._build_body(
+                keys_cat[order],
+                vals_cat[order],
+                self.hash_range,
+                self.num_bins,
+                capacity,
             )
 
         return shard_map(
             body,
             mesh=self.mesh,
-            in_specs=(self._out_specs(), self._in_spec()),
-            out_specs=P(self.axis_names),
+            in_specs=(plans.state_specs(state),),
+            out_specs=self._out_specs(),
             check_vma=False,
-        )(state, queries)
+        )(state)
 
-    def contains(self, state: DistributedHashGraph, queries) -> jax.Array:
-        return self.query(state, queries) > 0
+    # -- plan builders ---------------------------------------------------------
+    def plan_query(self, num_queries: Optional[int] = None) -> QueryPlan:
+        """A pure ``(state, queries) -> counts`` callable (no capacities).
 
-    def join_size(self, state: DistributedHashGraph, queries) -> jax.Array:
-        """Global inner-join cardinality (scalar, replicated)."""
-        return self._join_size_jit(state, self._pack_queries(queries))
+        Also exposes ``.join_size(state, queries)`` for the replicated join
+        cardinality under the same plan.
+        """
+        return QueryPlan(self, num_queries)
 
-    @partial(jax.jit, static_argnums=0)
-    def _join_size_jit(self, state: DistributedHashGraph, queries: jax.Array):
-        def body(dhg, q):
-            return multi_hashgraph.join_size_sharded(
-                dhg,
-                q,
-                capacity_slack=self.capacity_slack,
-                paper_faithful_probe=self.paper_faithful_probe,
-                max_probe=self.max_probe,
-            )
+    def plan_caps(self, state, queries) -> tuple[int, int]:
+        """One counts round sizing retrieval exactly: ``(seg, out)`` ints.
 
-        return shard_map(
-            body,
-            mesh=self.mesh,
-            in_specs=(self._out_specs(), self._in_spec()),
-            out_specs=P(),
-            check_vma=False,
-        )(state, queries)
-
-    # -- retrieval (two-pass count→prefix-sum→gather) --------------------------
-    @partial(jax.jit, static_argnums=0)
-    def _plan_seg_capacity_jit(
-        self, state: DistributedHashGraph, queries: jax.Array
-    ) -> jax.Array:
-        def body(dhg, q):
-            return multi_hashgraph.plan_seg_capacity_sharded(
-                dhg, q, capacity_slack=self.capacity_slack
-            )
-
-        return shard_map(
-            body,
-            mesh=self.mesh,
-            in_specs=(self._out_specs(), self._in_spec()),
-            out_specs=P(),
-            check_vma=False,
-        )(state, queries)
+        Blocks on a device→host read of two scalars — call at plan time,
+        never inside a jitted program (pass explicit capacities there).
+        """
+        st = as_state(self, state)
+        q = self._pack_queries(queries)
+        seg_need, out_need = plans.exec_plan_caps(self, st, q)
+        return int(seg_need), int(out_need)
 
     def _resolve_caps(self, state, queries, out_capacity, seg_capacity):
-        """Static output sizing, lane-aligned.
+        """Static output sizing, lane-aligned, count-first.
 
-        ``out_capacity=None`` defaults to 2× the balanced per-device share.
-        ``seg_capacity=None`` runs the cheap psum'd-counts planning round
-        (``plan_seg_capacity_sharded``) and sizes the return segments
-        *exactly*, cutting the padded return traffic of the old
-        ``seg = out`` default.
+        Any ``None`` capacity triggers the combined counts planning round
+        (:func:`repro.core.multi_hashgraph.plan_caps_sharded`):
+        ``out_capacity`` is sized *exactly* (rounded to the lane multiple)
+        and ``seg_capacity`` is rounded up to a power of two — at most 2×
+        the exact width while quantizing the static shape so repeated calls
+        with shifting duplicate structure reuse a bounded set of compiled
+        programs.  The planning round blocks on a device→host read; under
+        an outer ``jax.jit`` pass explicit capacities instead.
         """
-        n_local = queries.shape[0] // self.num_devices
-        if out_capacity is None:
-            out_capacity = 2 * max(n_local, 8)
-        out_cap = _cdiv(out_capacity, 8) * 8
-        if seg_capacity is None:
-            planned = int(self._plan_seg_capacity_jit(state, queries))
-            # Round up to a power of two: at most 2x the exact width (still
-            # far below the old seg=out worst case) while quantizing the
-            # static shape so repeated calls with shifting duplicate
-            # structure reuse a bounded set of compiled programs.
-            seg_cap = max(8, 1 << (planned - 1).bit_length()) if planned > 0 else 8
-        else:
-            seg_cap = _cdiv(seg_capacity, 8) * 8
+        if out_capacity is None or seg_capacity is None:
+            seg_need, out_need = self.plan_caps(state, queries)
+            if out_capacity is None:
+                out_capacity = out_need
+            if seg_capacity is None:
+                seg_capacity = (
+                    max(8, 1 << (seg_need - 1).bit_length()) if seg_need > 0 else 8
+                )
+        out_cap = max(8, _cdiv(out_capacity, 8) * 8)
+        seg_cap = max(8, _cdiv(seg_capacity, 8) * 8)
         return out_cap, seg_cap
+
+    def _plan_statics(
+        self, name, state, queries, num_queries, out_capacity, seg_capacity
+    ):
+        """Shared plan-builder resolution: ``(num_queries, out_cap, seg_cap)``.
+
+        Capacities left ``None`` are sized by the counts round against the
+        sample ``(state, queries)`` (the only host sync; the returned plan
+        itself never syncs).  With both capacities explicit no sample is
+        needed and plan construction is free of device work.
+        """
+        if out_capacity is None or seg_capacity is None:
+            if state is None or queries is None:
+                raise ValueError(
+                    f"{name} needs a (state, queries) sample to size "
+                    "capacities, or explicit out_capacity and seg_capacity"
+                )
+            out_capacity, seg_capacity = self._resolve_caps(
+                state, queries, out_capacity, seg_capacity
+            )
+        else:
+            out_capacity = max(8, _cdiv(out_capacity, 8) * 8)
+            seg_capacity = max(8, _cdiv(seg_capacity, 8) * 8)
+        if num_queries is None and queries is not None:
+            num_queries = self._pack_queries(queries).shape[0]
+        return num_queries, out_capacity, seg_capacity
+
+    def plan_retrieve(
+        self,
+        state=None,
+        queries=None,
+        *,
+        num_queries: Optional[int] = None,
+        out_capacity: Optional[int] = None,
+        seg_capacity: Optional[int] = None,
+    ) -> RetrievePlan:
+        """Build a pure ``(state, queries) -> ShardRetrieval`` callable.
+
+        Capacity contract: see :meth:`_plan_statics`.
+        """
+        return RetrievePlan(
+            self,
+            *self._plan_statics(
+                "plan_retrieve", state, queries, num_queries, out_capacity, seg_capacity
+            ),
+        )
+
+    def plan_join(
+        self,
+        state=None,
+        queries=None,
+        *,
+        num_queries: Optional[int] = None,
+        out_capacity: Optional[int] = None,
+        seg_capacity: Optional[int] = None,
+    ) -> JoinPlan:
+        """Build a pure ``(state, queries) -> ShardJoin`` callable.
+
+        Capacity contract: see :meth:`_plan_statics`.
+        """
+        return JoinPlan(
+            self,
+            *self._plan_statics(
+                "plan_join", state, queries, num_queries, out_capacity, seg_capacity
+            ),
+        )
+
+    # -- eager shims over the plan executors -----------------------------------
+    def query(self, state, queries) -> jax.Array:
+        """Multiplicity of each global query key. Returns (Nq,) int32.
+
+        .. deprecated:: thin shim over :meth:`plan_query`; accepts a bare
+           ``DistributedHashGraph`` or a ``TableState``.
+        """
+        return plans.exec_query(
+            self, as_state(self, state), self._pack_queries(queries)
+        )
+
+    def contains(self, state, queries) -> jax.Array:
+        return self.query(state, queries) > 0
+
+    def join_size(self, state, queries) -> jax.Array:
+        """Global inner-join cardinality (scalar, replicated).
+
+        .. deprecated:: thin shim over ``plan_query().join_size``.
+        """
+        return plans.exec_join_size(
+            self, as_state(self, state), self._pack_queries(queries)
+        )
 
     def retrieve(
         self,
-        state: DistributedHashGraph,
+        state,
         queries,
         *,
         out_capacity: Optional[int] = None,
@@ -273,58 +536,25 @@ class DistributedHashTable:
 
         ``out_capacity`` bounds each device's total result count and
         ``seg_capacity`` the results any one owner shard returns to one
-        querying shard; both are static.  ``seg_capacity=None`` sizes the
-        segments from a count-only planning round (rounded up to a power of
-        two); the planning round blocks on a device→host read, so under an
-        outer ``jax.jit`` pass explicit capacities instead.  Overflow is
-        reported in ``num_dropped`` (replicated scalar) — never silently
-        truncated.
+        querying shard; both are static.  Either left ``None`` is sized by
+        the count-first planning round (exact for ``out_capacity``, next
+        power of two for ``seg_capacity``); the planning round blocks on a
+        device→host read, so under an outer ``jax.jit`` pass explicit
+        capacities (or use :meth:`plan_retrieve`).  Overflow is reported in
+        ``num_dropped`` (replicated scalar) — never silently truncated.
+
+        .. deprecated:: thin shim over :meth:`plan_retrieve`.
         """
-        queries = self._pack_queries(queries)
-        out_cap, seg_cap = self._resolve_caps(state, queries, out_capacity, seg_capacity)
-        return self._retrieve_jit(
-            state, queries, out_capacity=out_cap, seg_capacity=seg_cap
+        st = as_state(self, state)
+        q = self._pack_queries(queries)
+        out_cap, seg_cap = self._resolve_caps(st, q, out_capacity, seg_capacity)
+        return plans.exec_retrieve(
+            self, st, q, out_capacity=out_cap, seg_capacity=seg_cap
         )
-
-    @partial(
-        jax.jit,
-        static_argnums=0,
-        static_argnames=("out_capacity", "seg_capacity"),
-    )
-    def _retrieve_jit(
-        self,
-        state: DistributedHashGraph,
-        queries: jax.Array,
-        *,
-        out_capacity: int,
-        seg_capacity: int,
-    ) -> ShardRetrieval:
-        ax = tuple(self.axis_names)
-        out_specs = ShardRetrieval(
-            offsets=P(ax), values=P(ax), counts=P(ax), num_dropped=P()
-        )
-
-        def body(dhg, q):
-            return multi_hashgraph.retrieve_sharded(
-                dhg,
-                q,
-                seg_capacity=seg_capacity,
-                out_capacity=out_capacity,
-                capacity_slack=self.capacity_slack,
-                use_kernel=self.use_kernel,
-            )
-
-        return shard_map(
-            body,
-            mesh=self.mesh,
-            in_specs=(self._out_specs(), self._in_spec()),
-            out_specs=out_specs,
-            check_vma=False,
-        )(state, queries)
 
     def inner_join(
         self,
-        state: DistributedHashGraph,
+        state,
         queries,
         *,
         out_capacity: Optional[int] = None,
@@ -337,68 +567,36 @@ class DistributedHashTable:
         ``num_results[d]`` (pairs beyond it are ``-1`` padding).
         ``query_idx`` is the global query row id.  Same capacity/overflow
         contract as :meth:`retrieve`.
+
+        .. deprecated:: thin shim over :meth:`plan_join`.
         """
-        queries = self._pack_queries(queries)
-        out_cap, seg_cap = self._resolve_caps(state, queries, out_capacity, seg_capacity)
-        return self._inner_join_jit(
-            state, queries, out_capacity=out_cap, seg_capacity=seg_cap
+        st = as_state(self, state)
+        q = self._pack_queries(queries)
+        out_cap, seg_cap = self._resolve_caps(st, q, out_capacity, seg_capacity)
+        return plans.exec_join(
+            self, st, q, out_capacity=out_cap, seg_capacity=seg_cap
         )
-
-    @partial(
-        jax.jit,
-        static_argnums=0,
-        static_argnames=("out_capacity", "seg_capacity"),
-    )
-    def _inner_join_jit(
-        self,
-        state: DistributedHashGraph,
-        queries: jax.Array,
-        *,
-        out_capacity: int,
-        seg_capacity: int,
-    ) -> ShardJoin:
-        ax = tuple(self.axis_names)
-        out_specs = ShardJoin(
-            query_idx=P(ax), values=P(ax), num_results=P(ax), num_dropped=P()
-        )
-
-        def body(dhg, q):
-            return multi_hashgraph.inner_join_sharded(
-                dhg,
-                q,
-                seg_capacity=seg_capacity,
-                out_capacity=out_capacity,
-                capacity_slack=self.capacity_slack,
-                use_kernel=self.use_kernel,
-            )
-
-        return shard_map(
-            body,
-            mesh=self.mesh,
-            in_specs=(self._out_specs(), self._in_spec()),
-            out_specs=out_specs,
-            check_vma=False,
-        )(state, queries)
 
     # -- dynamic output buffers (ROADMAP: auto-retry on overflow) --------------
     def _auto_retry(
-        self, jit_fn, state, queries, out_capacity, seg_capacity, max_retries
+        self, exec_fn, state, queries, out_capacity, seg_capacity, max_retries
     ):
-        """Re-run ``jit_fn`` with doubled caps while ``num_dropped > 0``.
+        """Re-run ``exec_fn`` with doubled caps while ``num_dropped > 0``.
 
         Bails early when doubling stops shrinking ``num_dropped`` — drops
         from the *dispatch* stage depend on ``capacity_slack``, not on the
         output caps, so no amount of doubling (and recompiling) fixes them.
         """
-        queries = self._pack_queries(queries)
-        out_cap, seg_cap = self._resolve_caps(state, queries, out_capacity, seg_capacity)
-        res = jit_fn(state, queries, out_capacity=out_cap, seg_capacity=seg_cap)
+        st = as_state(self, state)
+        q = self._pack_queries(queries)
+        out_cap, seg_cap = self._resolve_caps(st, q, out_capacity, seg_capacity)
+        res = exec_fn(self, st, q, out_capacity=out_cap, seg_capacity=seg_cap)
         dropped = int(res.num_dropped)
         for _ in range(max_retries):
             if dropped == 0:
                 break
             out_cap, seg_cap = out_cap * 2, seg_cap * 2
-            res = jit_fn(state, queries, out_capacity=out_cap, seg_capacity=seg_cap)
+            res = exec_fn(self, st, q, out_capacity=out_cap, seg_capacity=seg_cap)
             prev, dropped = dropped, int(res.num_dropped)
             if dropped >= prev:
                 break  # not a capacity problem (e.g. route drops)
@@ -406,7 +604,7 @@ class DistributedHashTable:
 
     def retrieve_auto(
         self,
-        state: DistributedHashGraph,
+        state,
         queries,
         *,
         out_capacity: Optional[int] = None,
@@ -423,12 +621,12 @@ class DistributedHashTable:
         drops are not capacity-fixable).
         """
         return self._auto_retry(
-            self._retrieve_jit, state, queries, out_capacity, seg_capacity, max_retries
+            plans.exec_retrieve, state, queries, out_capacity, seg_capacity, max_retries
         )
 
     def inner_join_auto(
         self,
-        state: DistributedHashGraph,
+        state,
         queries,
         *,
         out_capacity: Optional[int] = None,
@@ -437,8 +635,13 @@ class DistributedHashTable:
     ) -> ShardJoin:
         """:meth:`inner_join` with bounded capacity-doubling retries."""
         return self._auto_retry(
-            self._inner_join_jit, state, queries, out_capacity, seg_capacity, max_retries
+            plans.exec_join, state, queries, out_capacity, seg_capacity, max_retries
         )
+
+
+# ---------------------------------------------------------------------------
+# Host-side views — vectorized numpy block slicing (no per-query Python loop)
+# ---------------------------------------------------------------------------
 
 
 def retrieval_to_lists(result: ShardRetrieval) -> list:
@@ -448,12 +651,37 @@ def retrieval_to_lists(result: ShardRetrieval) -> list:
     ``d*n_local : (d+1)*n_local``), so global query ``i``'s values sit in
     device ``i // n_local``'s block of ``values`` at that block's local CSR
     offsets.  Multi-column schemas yield ``(k_i, C)`` arrays per query.
+
+    Vectorized: per-shard valid prefixes are concatenated (``D`` slices) and
+    one ``np.split`` at the per-query offset boundaries yields the views —
+    no O(num_queries) Python loop.
     """
     counts = np.asarray(result.counts)
     offsets = np.asarray(result.offsets)
     values = np.asarray(result.values)
     num_queries = counts.shape[0]
     # len(offsets) = D*(n_local+1), len(counts) = D*n_local  =>  D:
+    d = offsets.shape[0] - counts.shape[0]
+    n_local = num_queries // d
+    out_cap = values.shape[0] // d
+    off2 = offsets.reshape(d, n_local + 1)
+    flat = np.concatenate(
+        [values[s * out_cap : s * out_cap + off2[s, -1]] for s in range(d)],
+        axis=0,
+    )
+    # Per-query lengths from the (capacity-clamped) offsets, matching the
+    # CSR exactly even when overflow truncated a tail.
+    lens = np.diff(off2, axis=1).reshape(-1)
+    return np.split(flat, np.cumsum(lens)[:-1])
+
+
+def _retrieval_to_lists_loop(result: ShardRetrieval) -> list:
+    """Reference implementation of :func:`retrieval_to_lists` (per-query
+    Python loop) — kept for the vectorization parity tests."""
+    counts = np.asarray(result.counts)
+    offsets = np.asarray(result.offsets)
+    values = np.asarray(result.values)
+    num_queries = counts.shape[0]
     d = offsets.shape[0] - counts.shape[0]
     n_local = num_queries // d
     out_cap = values.shape[0] // d
@@ -468,7 +696,27 @@ def retrieval_to_lists(result: ShardRetrieval) -> list:
 
 def join_to_pairs(result: ShardJoin) -> "np.ndarray":
     """Host-side view of a :class:`ShardJoin`: an (M, 1 + C) array of rows
-    ``(query_idx, *value_columns)`` — ``(M, 2)`` for the 1-column schema."""
+    ``(query_idx, *value_columns)`` — ``(M, 2)`` for the 1-column schema.
+
+    Vectorized: a single boolean mask (slot < per-shard ``num_results``)
+    selects valid pairs from all shards at once.
+    """
+    qi = np.asarray(result.query_idx)
+    vals = np.asarray(result.values)
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    nres = np.asarray(result.num_results)
+    d = nres.shape[0]
+    out_cap = qi.shape[0] // d
+    mask = np.arange(out_cap)[None, :] < nres[:, None]
+    qi_sel = qi.reshape(d, out_cap)[mask]
+    vals_sel = vals.reshape(d, out_cap, -1)[mask]
+    return np.concatenate([qi_sel[:, None], vals_sel], axis=1).astype(np.int32)
+
+
+def _join_to_pairs_loop(result: ShardJoin) -> "np.ndarray":
+    """Reference implementation of :func:`join_to_pairs` (per-shard loop) —
+    kept for the vectorization parity tests."""
     qi = np.asarray(result.query_idx)
     vals = np.asarray(result.values)
     if vals.ndim == 1:

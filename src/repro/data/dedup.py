@@ -87,8 +87,6 @@ def dedup_mask_distributed(
 
 def _distributed_first_rowid(table, state, fp):
     """Min stored value among matches, computed shard-side."""
-    import functools
-
     from jax.sharding import PartitionSpec as P
     from repro.utils.compat import shard_map
     from repro.core import multi_hashgraph

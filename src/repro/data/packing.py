@@ -9,7 +9,6 @@ streams, the common LM pretraining setup).
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 

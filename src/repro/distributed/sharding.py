@@ -23,7 +23,7 @@ goes on ``tp`` (sequence-sharded cache — required for kv_heads=1 archs).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np

@@ -78,34 +78,22 @@ def bucket_probe_2d(
 # ---------------------------------------------------------------------------
 
 
-def _gather_kernel(
-    offsets_ref, starts_ref, table_ref, vals_ref, rowidx_ref, *, num_rows: int, fill: int, block_rows: int
-):
-    """Resolve a tile of output slots to gathered table values.
+def _gather_tile(offsets, starts, table, slot, *, num_rows: int, fill: int):
+    """Resolve one tile of output slots to gathered table values.
 
     Slot ``s`` belongs to the source row found by binary search in the
     prefix-sum ``offsets`` (searchsorted side='right', branchless fixed-trip
     bisection — the same idiom as the query-side segment search), and reads
-    ``table[starts[row] + (s - offsets[row])]``.  ``offsets`` / ``starts`` /
-    ``table`` are whole-array VMEM residents; only the output is tiled.
+    ``table[starts[row] + (s - offsets[row])]``.  Shared by the single-CSR
+    and the batched (one-CSR-per-source) kernels.
     """
-    offsets = offsets_ref[...].reshape(-1)  # (num_rows+1 padded,) int32
-    starts = starts_ref[...].reshape(-1)  # (num_rows padded,) int32
-    table = table_ref[...].reshape(-1)  # (Tn,) int32
     tn = table.shape[0]
-    i = pl.program_id(0)
-    tile = (block_rows, 128)
-    slot = (
-        i * (block_rows * 128)
-        + jax.lax.broadcasted_iota(jnp.int32, tile, 0) * 128
-        + jax.lax.broadcasted_iota(jnp.int32, tile, 1)
-    )
     total = jnp.take(offsets, num_rows)
 
     # searchsorted(offsets, slot, side='right') via fixed-trip bisection.
     iters = max(1, int(num_rows + 1).bit_length())
-    lo = jnp.zeros(tile, jnp.int32)
-    hi = jnp.full(tile, num_rows + 1, jnp.int32)
+    lo = jnp.zeros(slot.shape, jnp.int32)
+    hi = jnp.full(slot.shape, num_rows + 1, jnp.int32)
 
     def body(_, lohi):
         lo, hi = lohi
@@ -122,8 +110,52 @@ def _gather_kernel(
     src = jnp.take(starts, row, axis=0) + (slot - jnp.take(offsets, row, axis=0))
     vals = jnp.take(table, jnp.clip(src, 0, tn - 1), axis=0)
     valid = slot < total
-    vals_ref[...] = jnp.where(valid, vals, jnp.int32(fill))
-    rowidx_ref[...] = jnp.where(valid, row, jnp.int32(-1))
+    return jnp.where(valid, vals, jnp.int32(fill)), jnp.where(valid, row, jnp.int32(-1))
+
+
+def _gather_kernel(
+    offsets_ref, starts_ref, table_ref, vals_ref, rowidx_ref, *, num_rows: int, fill: int, block_rows: int
+):
+    """Single-CSR gather: ``offsets``/``starts``/``table`` are whole-array
+    VMEM residents; only the output is tiled."""
+    offsets = offsets_ref[...].reshape(-1)  # (num_rows+1 padded,) int32
+    starts = starts_ref[...].reshape(-1)  # (num_rows padded,) int32
+    table = table_ref[...].reshape(-1)  # (Tn,) int32
+    i = pl.program_id(0)
+    tile = (block_rows, 128)
+    slot = (
+        i * (block_rows * 128)
+        + jax.lax.broadcasted_iota(jnp.int32, tile, 0) * 128
+        + jax.lax.broadcasted_iota(jnp.int32, tile, 1)
+    )
+    vals, rows = _gather_tile(
+        offsets, starts, table, slot, num_rows=num_rows, fill=fill
+    )
+    vals_ref[...] = vals
+    rowidx_ref[...] = rows
+
+
+def _gather_batched_kernel(
+    offsets_ref, starts_ref, table_ref, vals_ref, rowidx_ref, *, num_rows: int, fill: int, block_rows: int
+):
+    """Batched gather: grid axis 0 picks the source CSR, axis 1 the output
+    tile within that source's segment.  The table is shared by all sources
+    (each source gathers different runs of the same owner shard)."""
+    offsets = offsets_ref[...].reshape(-1)  # this source's prefix sums
+    starts = starts_ref[...].reshape(-1)  # this source's run starts
+    table = table_ref[...].reshape(-1)  # (Tn,) int32, shared
+    i = pl.program_id(1)
+    tile = (block_rows, 128)
+    slot = (
+        i * (block_rows * 128)
+        + jax.lax.broadcasted_iota(jnp.int32, tile, 0) * 128
+        + jax.lax.broadcasted_iota(jnp.int32, tile, 1)
+    )
+    vals, rows = _gather_tile(
+        offsets, starts, table, slot, num_rows=num_rows, fill=fill
+    )
+    vals_ref[...] = vals.reshape(1, block_rows, 128)
+    rowidx_ref[...] = rows.reshape(1, block_rows, 128)
 
 
 def csr_gather_2d(
@@ -169,3 +201,62 @@ def csr_gather_2d(
         interpret=interpret,
         name="csr_gather",
     )(offsets2d, starts2d, table2d)
+
+
+def csr_gather_batched_2d(
+    offsets3d: jax.Array,
+    starts3d: jax.Array,
+    table2d: jax.Array,
+    *,
+    capacity_rows: int,
+    num_rows: int,
+    fill: int = -1,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused per-source CSR gathers: one grid over (sources, output tiles).
+
+    ``offsets3d``: ``(S, r_o, 128)`` int32 per-source prefix sums
+    (``num_rows + 1`` valid entries each, padding ``> offsets[num_rows]``);
+    ``starts3d``: ``(S, r_s, 128)`` per-source run starts; ``table2d``:
+    ``(r_t, 128)`` shared values table.  Returns ``(values, row_idx)``,
+    each ``(S, capacity_rows, 128)`` int32.  Replaces S separate
+    ``csr_gather_2d`` launches (the ROADMAP owner-side per-source loop)
+    with a single ``pallas_call``.
+    """
+    s_dim = offsets3d.shape[0]
+    for name, arr in (("offsets", offsets3d), ("starts", starts3d)):
+        if arr.ndim != 3 or arr.shape[2] != 128 or arr.shape[0] != s_dim:
+            raise ValueError(f"{name} must be (S, rows, 128), got {arr.shape}")
+    if table2d.shape[1] != 128:
+        raise ValueError("table lane dim must be 128")
+    grid = (s_dim, cdiv(capacity_rows, block_rows))
+    ospec = pl.BlockSpec(
+        (1, block_rows, 128), lambda s, i: (s, i, 0), memory_space=pltpu.VMEM
+    )
+
+    def per_source(arr):
+        return pl.BlockSpec(
+            (1, arr.shape[1], 128), lambda s, i: (s, 0, 0), memory_space=pltpu.VMEM
+        )
+
+    tspec = pl.BlockSpec(
+        table2d.shape, lambda s, i: (0, 0), memory_space=pltpu.VMEM
+    )
+    return pl.pallas_call(
+        partial(
+            _gather_batched_kernel,
+            num_rows=num_rows,
+            fill=fill,
+            block_rows=block_rows,
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((s_dim, capacity_rows, 128), jnp.int32),
+            jax.ShapeDtypeStruct((s_dim, capacity_rows, 128), jnp.int32),
+        ],
+        grid=grid,
+        in_specs=[per_source(offsets3d), per_source(starts3d), tspec],
+        out_specs=[ospec, ospec],
+        interpret=interpret,
+        name="csr_gather_batched",
+    )(offsets3d, starts3d, table2d)

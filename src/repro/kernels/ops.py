@@ -191,6 +191,97 @@ def csr_gather(
 
 
 @partial(
+    jax.jit, static_argnames=("capacity", "fill", "block_rows", "interpret")
+)
+def csr_gather_batched(
+    starts: jax.Array,
+    counts: jax.Array,
+    table: jax.Array,
+    *,
+    capacity: int,
+    fill: int = -1,
+    block_rows: int = 8,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused per-source CSR compaction: S gathers in one kernel launch.
+
+    ``starts``/``counts`` are ``(S, N)`` — one CSR gather problem per source
+    row, all reading the shared ``table`` — and every source gets its own
+    static ``capacity``-slot output segment.  Equivalent to ``S`` calls of
+    :func:`csr_gather` (or a vmap of ``hashgraph.csr_gather``) but with a
+    single grid over ``(sources, capacity tiles)`` — the ROADMAP kernel
+    fusion of the owner-side per-source loop in distributed retrieval.
+
+    Returns ``(offsets, row_idx, gathered, num_dropped)``: ``offsets``
+    ``(S, N+1)`` clamped per source, ``row_idx``/``gathered``
+    ``(S, capacity[, C])``, and ``num_dropped`` the () int32 total overflow
+    across sources.  Same dtype contract as :func:`csr_gather` (int32 lanes,
+    uint32 bitcast through, multi-column tables resolve the bisection once).
+    """
+    s_dim, num_rows = counts.shape
+    counts = counts.astype(jnp.int32)
+    out_dtype = table.dtype
+    if out_dtype == jnp.uint32:
+        table = jax.lax.bitcast_convert_type(table, jnp.int32)
+    elif out_dtype != jnp.int32:
+        raise ValueError(
+            f"csr_gather kernel supports int32/uint32 tables, got {out_dtype}"
+        )
+    starts = starts.astype(jnp.int32)
+    offsets = jnp.concatenate(
+        [
+            jnp.zeros((s_dim, 1), jnp.int32),
+            jnp.cumsum(counts, axis=1, dtype=jnp.int32),
+        ],
+        axis=1,
+    )
+    totals = offsets[:, -1]
+
+    def pad_rows(x, fillv):
+        n = x.shape[1]
+        padded = cdiv(n, LANES) * LANES
+        if padded != n:
+            x = jnp.pad(x, ((0, 0), (0, padded - n)), constant_values=fillv)
+        return x.reshape(s_dim, -1, LANES)
+
+    cap_padded = cdiv(capacity, LANES * block_rows) * (LANES * block_rows)
+    col0 = table if table.ndim == 1 else table[:, 0]
+    t, _ = common.pad_to_block_1d(col0.astype(jnp.int32), LANES, fill)
+    vals3, rows3 = _probe.csr_gather_batched_2d(
+        pad_rows(offsets, _INT32_MAX),
+        pad_rows(starts, 0),
+        common.as_lanes(t, LANES),
+        capacity_rows=cap_padded // LANES,
+        num_rows=num_rows,
+        fill=fill,
+        block_rows=block_rows,
+        interpret=_auto(interpret),
+    )
+    row_idx = rows3.reshape(s_dim, -1)[:, :capacity]
+    if table.ndim == 1:
+        gathered = vals3.reshape(s_dim, -1)[:, :capacity]
+    else:
+        # Reuse the kernel's row resolution for the remaining columns (same
+        # contract as csr_gather, vectorized over the source axis).
+        slot = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+        valid = row_idx >= 0
+        rowc = jnp.clip(row_idx, 0, num_rows - 1)
+        src = jnp.take_along_axis(starts, rowc, axis=1) + (
+            slot - jnp.take_along_axis(offsets, rowc, axis=1)
+        )
+        srcc = jnp.clip(src, 0, table.shape[0] - 1)
+        cols = [vals3.reshape(s_dim, -1)[:, :capacity]] + [
+            jnp.where(valid, table[srcc, c], jnp.int32(fill))
+            for c in range(1, table.shape[1])
+        ]
+        gathered = jnp.stack(cols, axis=-1)
+    if out_dtype == jnp.uint32:
+        gathered = jax.lax.bitcast_convert_type(gathered, jnp.uint32)
+    num_dropped = jnp.sum(jnp.maximum(totals - capacity, 0)).astype(jnp.int32)
+    return jnp.minimum(offsets, capacity), row_idx, gathered, num_dropped
+
+
+@partial(
     jax.jit,
     static_argnames=(
         "causal",

@@ -24,7 +24,7 @@ from repro.configs.base import ARCH_IDS, SHAPE_SUITE, get_config, shape_cell
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh, production_parallel
 from repro.models.api import build_model
-from repro.optim import AdamWConfig, adamw_init
+from repro.optim import adamw_init
 from repro.train.step import TrainStepConfig, make_train_step
 from repro.utils import human_bytes, tree_param_count
 

@@ -15,7 +15,6 @@ handled *before* importing jax.
 """
 import argparse
 import os
-import sys
 
 
 def _parse():

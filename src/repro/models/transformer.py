@@ -14,7 +14,6 @@ windowed attention).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Optional
 
 import jax

@@ -8,7 +8,7 @@ update still runs in f32 (moments are upcast, updated, recast).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

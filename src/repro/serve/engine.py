@@ -17,10 +17,9 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.distributed import sharding as shd
-from repro.distributed.parallel import ParallelConfig
 from repro.models.api import ModelBundle
 
 

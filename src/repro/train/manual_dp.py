@@ -15,8 +15,6 @@ dense all-to-alls on a fast fabric beat sparse parameter-server schemes.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

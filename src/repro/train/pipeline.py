@@ -15,8 +15,6 @@ fraction is the textbook ``(S-1)/(M+S-1)``.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -22,10 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.distributed import sharding as shd

@@ -18,7 +18,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.table import DistributedHashTable
-from repro.core import multi_hashgraph
 
 
 def check(name, cond):

@@ -10,12 +10,12 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import get_smoke_config
 from repro.core.table import DistributedHashTable
 from repro.data import dedup_mask, dedup_mask_distributed
-from repro.distributed.parallel import ParallelConfig, single_device_parallel
+from repro.distributed.parallel import ParallelConfig
 from repro.distributed import sharding as shd
 from repro.models import moe as moe_mod
 from repro.models.api import build_model

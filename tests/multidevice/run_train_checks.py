@@ -14,7 +14,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 from repro.utils.compat import shard_map
 
 from repro.configs.base import get_smoke_config

@@ -1,7 +1,5 @@
 """Per-architecture smoke tests: reduced same-family config, one forward /
 train step on CPU, asserting output shapes + finite values (assignment f)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

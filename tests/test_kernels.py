@@ -133,6 +133,69 @@ def test_csr_gather_kernel_matches_core():
             np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
+@pytest.mark.parametrize(
+    "s_dim,n_rows,cap", [(1, 64, 128), (8, 100, 64), (5, 37, 8), (16, 256, 520)]
+)
+def test_csr_gather_batched_matches_per_source(s_dim, n_rows, cap):
+    """Fused (sources, tiles) grid == S independent csr_gather calls,
+    including offsets/rows/values and the summed overflow count."""
+    from repro.core import hashgraph as hgm
+
+    rng = np.random.default_rng(s_dim * 31 + n_rows)
+    table = jnp.asarray(rng.integers(0, 1 << 20, size=777, dtype=np.int32))
+    counts = rng.integers(0, 6, size=(s_dim, n_rows)).astype(np.int32)
+    starts = rng.integers(0, 770, size=(s_dim, n_rows)).astype(np.int32)
+    off, rows, vals, dropped = ops.csr_gather_batched(
+        jnp.asarray(starts), jnp.asarray(counts), table, capacity=cap, interpret=True
+    )
+    want_dropped = 0
+    for s in range(s_dim):
+        w_off, w_rows, w_vals, w_drop = hgm.csr_gather(
+            jnp.asarray(starts[s]), jnp.asarray(counts[s]), table, cap
+        )
+        np.testing.assert_array_equal(np.asarray(off[s]), np.asarray(w_off))
+        np.testing.assert_array_equal(np.asarray(rows[s]), np.asarray(w_rows))
+        np.testing.assert_array_equal(np.asarray(vals[s]), np.asarray(w_vals))
+        want_dropped += int(w_drop)
+    assert int(dropped) == want_dropped
+
+
+def test_csr_gather_batched_multicol_and_uint32():
+    """Multi-column tables reuse the kernel's row resolution; uint32 values
+    survive the int32 lanes (bitcast round trip)."""
+    from repro.core import hashgraph as hgm
+
+    rng = np.random.default_rng(12)
+    s_dim, n_rows, cap = 4, 50, 64
+    counts = rng.integers(0, 4, size=(s_dim, n_rows)).astype(np.int32)
+    starts = rng.integers(0, 250, size=(s_dim, n_rows)).astype(np.int32)
+    table3 = jnp.asarray(rng.integers(0, 1 << 20, size=(256, 3), dtype=np.int32))
+    _, _, vals, _ = ops.csr_gather_batched(
+        jnp.asarray(starts), jnp.asarray(counts), table3, capacity=cap, interpret=True
+    )
+    for s in range(s_dim):
+        _, _, w_vals, _ = hgm.csr_gather(
+            jnp.asarray(starts[s]), jnp.asarray(counts[s]), table3, cap
+        )
+        np.testing.assert_array_equal(np.asarray(vals[s]), np.asarray(w_vals))
+    tableu = jnp.asarray(
+        rng.integers(0, 2**32, size=256, dtype=np.uint64).astype(np.uint32)
+    )
+    _, _, valsu, _ = ops.csr_gather_batched(
+        jnp.asarray(starts), jnp.asarray(counts), tableu, capacity=cap, interpret=True
+    )
+    assert valsu.dtype == jnp.uint32
+    for s in range(s_dim):
+        _, _, w_vals, _ = hgm.csr_gather(
+            jnp.asarray(starts[s]),
+            jnp.asarray(counts[s]),
+            tableu,
+            cap,
+            fill=jnp.uint32(0xFFFFFFFF),
+        )
+        np.testing.assert_array_equal(np.asarray(valsu[s]), np.asarray(w_vals))
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

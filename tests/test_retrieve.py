@@ -8,14 +8,16 @@ overflow contract (reported, never silent).
 """
 from collections import defaultdict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import hashgraph
+from repro.core.multi_hashgraph import ShardJoin, ShardRetrieval
 from repro.core.table import (
     DistributedHashTable,
+    _join_to_pairs_loop,
+    _retrieval_to_lists_loop,
     join_to_pairs,
     retrieval_to_lists,
 )
@@ -306,3 +308,64 @@ def test_retrieve_1m_keys_mesh8(mesh8):
     np.testing.assert_array_equal(
         np.asarray(res.counts), np.asarray(table.query(state, jnp.asarray(queries)))
     )
+
+
+# ---------------------------------------------------------------------------
+# vectorized host-side views: parity against the original per-query loops
+# ---------------------------------------------------------------------------
+
+
+def _random_shard_retrieval(rng, d, n_local, out_cap, cols=None, clamp=False):
+    """Synthesize a structurally-valid ShardRetrieval (global-view arrays)."""
+    offsets, counts, values = [], [], []
+    for _ in range(d):
+        c = rng.integers(0, 4, size=n_local).astype(np.int32)
+        off = np.concatenate([[0], np.cumsum(c)]).astype(np.int32)
+        if clamp:
+            off = np.minimum(off, out_cap)
+        vshape = (out_cap,) if cols is None else (out_cap, cols)
+        v = rng.integers(0, 1000, size=vshape).astype(np.int32)
+        offsets.append(off)
+        counts.append(c)
+        values.append(v)
+    return ShardRetrieval(
+        offsets=jnp.asarray(np.concatenate(offsets)),
+        values=jnp.asarray(np.concatenate(values, axis=0)),
+        counts=jnp.asarray(np.concatenate(counts)),
+        num_dropped=jnp.int32(0),
+    )
+
+
+@pytest.mark.parametrize("cols", [None, 3])
+@pytest.mark.parametrize("clamp", [False, True])
+def test_retrieval_to_lists_vectorized_parity(cols, clamp):
+    rng = np.random.default_rng(5 + (cols or 0) + clamp)
+    res = _random_shard_retrieval(rng, d=4, n_local=13, out_cap=32, cols=cols, clamp=clamp)
+    got = retrieval_to_lists(res)
+    want = _retrieval_to_lists_loop(res)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("cols", [None, 2])
+@pytest.mark.parametrize("empty", [False, True])
+def test_join_to_pairs_vectorized_parity(cols, empty):
+    rng = np.random.default_rng(9 + (cols or 0) + empty)
+    d, out_cap = 4, 24
+    nres = (
+        np.zeros(d, np.int32)
+        if empty
+        else rng.integers(0, out_cap + 1, size=d).astype(np.int32)
+    )
+    vshape = (d * out_cap,) if cols is None else (d * out_cap, cols)
+    res = ShardJoin(
+        query_idx=jnp.asarray(rng.integers(0, 100, size=d * out_cap).astype(np.int32)),
+        values=jnp.asarray(rng.integers(0, 1000, size=vshape).astype(np.int32)),
+        num_results=jnp.asarray(nres),
+        num_dropped=jnp.int32(0),
+    )
+    got = join_to_pairs(res)
+    want = _join_to_pairs_loop(res)
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == want.dtype == np.int32

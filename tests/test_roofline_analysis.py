@@ -1,7 +1,6 @@
 """hlo_cost analyzer tests: trip counts, dot flops, collective wire bytes."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis import hlo_cost

@@ -1,7 +1,6 @@
 """Sharding-rule tests against the production mesh shape (no devices needed:
 AbstractMesh carries only the axis-name → size mapping)."""
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -1,0 +1,292 @@
+"""Mutation semantics of the versioned plan/execute table API.
+
+Oracle-driven tests of the LSM-style ``TableState``: insert→query,
+delete→query, delete-then-reinsert, compact-equivalence (a compacted table
+answers identically to the delta'd table), delta-ring overflow, and the
+acceptance contract that a ``build → insert → delete → plan`` program
+composes under a single outer ``jax.jit`` with no device→host sync after
+planning.  Runs the full schema grid (uint32 and packed-uint64 keys, 1 and
+2 value columns) on both the 1-device and the 8-way forced-host mesh.
+"""
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schema import TableSchema
+from repro.core.state import TableState
+from repro.core.table import (
+    DistributedHashTable,
+    join_to_pairs,
+    retrieval_to_lists,
+)
+
+SCHEMAS = [
+    pytest.param(TableSchema("uint32", 1), id="u32x1"),
+    pytest.param(TableSchema("uint64", 2), id="u64x2"),
+]
+
+
+def _keys_for(schema, rng, n, lo=0, hi=1 << 16):
+    """Random keys in the schema's host dtype (u64 keys exercise both lanes)."""
+    if schema.key_dtype == "uint64":
+        base = rng.integers(lo, hi, size=n).astype(np.uint64)
+        return (base << np.uint64(32)) | rng.integers(0, 1 << 30, size=n).astype(np.uint64)
+    return rng.integers(lo, hi, size=n, dtype=np.uint32)
+
+
+def _values_for(schema, start, n):
+    ids = np.arange(start, start + n, dtype=np.int32)
+    if schema.value_cols == 1:
+        return ids
+    return np.stack([ids] + [ids * 7 + c for c in range(1, schema.value_cols)], axis=1)
+
+
+def _value_rows(values):
+    """Per-row hashable view of a value array: int or tuple per row."""
+    if values.ndim == 1:
+        return [int(v) for v in values]
+    return [tuple(int(x) for x in row) for row in values]
+
+
+class Oracle:
+    """Reference multiset table with epoch-aware deletes."""
+
+    def __init__(self):
+        self.rows = {}  # key -> list of value rows
+
+    def insert(self, keys, values):
+        for k, v in zip(keys.tolist(), _value_rows(values)):
+            self.rows.setdefault(int(k), []).append(v)
+
+    def delete(self, keys):
+        for k in keys.tolist():
+            self.rows.pop(int(k), None)
+
+    def count(self, k):
+        return len(self.rows.get(int(k), []))
+
+    def values(self, k):
+        return sorted(self.rows.get(int(k), []), key=repr)
+
+
+def _assert_state_matches(table, state, queries, oracle):
+    q = table.schema.pack_keys(queries)
+    counts = np.asarray(table.query(state, q))
+    want = np.array([oracle.count(k) for k in queries], np.int32)
+    np.testing.assert_array_equal(counts, want)
+    res = table.retrieve(state, q)
+    assert int(res.num_dropped) == 0
+    per_q = retrieval_to_lists(res)
+    for i, k in enumerate(queries):
+        got = sorted(_value_rows(np.asarray(per_q[i])), key=repr)
+        assert got == oracle.values(k), f"query {i} (key {int(k)})"
+    return res
+
+
+@pytest.mark.parametrize("schema", SCHEMAS)
+@pytest.mark.parametrize("meshname", ["mesh1", "mesh8"])
+def test_mutation_lifecycle_matches_oracle(schema, meshname, request):
+    """insert→query, delete→query, delete-then-reinsert, compact-equivalence."""
+    mesh = request.getfixturevalue(meshname)
+    d = 8 if meshname == "mesh8" else 1
+    table = DistributedHashTable(mesh, ("d",), hash_range=1 << 12, schema=schema)
+    rng = np.random.default_rng(42 + d + schema.value_cols)
+
+    n = 512
+    keys = _keys_for(schema, rng, n)
+    vals = _values_for(schema, 0, n)
+    oracle = Oracle()
+    oracle.insert(keys, vals)
+    state = table.init(jnp.asarray(keys) if schema.key_dtype == "uint32" else keys,
+                       values=jnp.asarray(vals))
+    assert int(state.num_dropped) == 0
+
+    queries = np.concatenate([keys[: 128 - 2 * d], _keys_for(schema, rng, 2 * d, hi=1 << 14)])
+
+    # -- insert ------------------------------------------------------------
+    ins = _keys_for(schema, rng, 8 * d, lo=1 << 16, hi=1 << 17)
+    ins_vals = _values_for(schema, 10_000, len(ins))
+    state = state.insert(ins, jnp.asarray(ins_vals))
+    oracle.insert(ins, ins_vals)
+    queries = np.concatenate([queries[: -8 * d], ins])
+    _assert_state_matches(table, state, queries, oracle)
+
+    # -- delete (hits base rows and delta rows) ----------------------------
+    dels = np.concatenate([keys[:16], ins[: 2 * d]])
+    state = state.delete(dels)
+    oracle.delete(dels)
+    _assert_state_matches(table, state, queries, oracle)
+
+    # -- delete-then-reinsert: later inserts are visible again -------------
+    re_keys = np.concatenate([keys[:8], keys[8:16]])  # previously deleted
+    re_vals = _values_for(schema, 20_000, len(re_keys))
+    state = state.insert(re_keys, jnp.asarray(re_vals))
+    oracle.insert(re_keys, re_vals)
+    res_delta = _assert_state_matches(table, state, queries, oracle)
+
+    # -- compact-equivalence ----------------------------------------------
+    compacted = state.compact()
+    assert int(compacted.num_dropped) == 0
+    assert compacted.epoch == 0 and len(compacted.deltas) == 0
+    res_comp = _assert_state_matches(table, compacted, queries, oracle)
+    np.testing.assert_array_equal(
+        np.asarray(res_comp.counts), np.asarray(res_delta.counts)
+    )
+    # join path agrees across the delta'd and compacted states
+    q = table.schema.pack_keys(queries)
+    ja = sorted(map(tuple, join_to_pairs(table.inner_join(state, q)).tolist()))
+    jb = sorted(map(tuple, join_to_pairs(table.inner_join(compacted, q)).tolist()))
+    assert ja == jb
+    assert int(table.join_size(state, q)) == len(ja)
+
+
+def test_delta_ring_overflow_raises(mesh8):
+    table = DistributedHashTable(
+        mesh8, ("d",), hash_range=1 << 10, max_deltas=2
+    )
+    rng = np.random.default_rng(7)
+    state = table.init(jnp.asarray(rng.integers(0, 1 << 14, 256, dtype=np.uint32)))
+    for _ in range(2):
+        state = state.insert(
+            jnp.asarray(rng.integers(0, 1 << 14, 8, dtype=np.uint32))
+        )
+    with pytest.raises(RuntimeError, match="delta ring full"):
+        state.insert(jnp.asarray(rng.integers(0, 1 << 14, 8, dtype=np.uint32)))
+    # compacting frees the ring
+    state = state.compact()
+    state = state.insert(jnp.asarray(rng.integers(0, 1 << 14, 8, dtype=np.uint32)))
+    assert state.epoch == 1
+
+
+def test_tombstone_overflow_reported(mesh8):
+    table = DistributedHashTable(
+        mesh8, ("d",), hash_range=1 << 10, tombstone_capacity=8
+    )
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 1 << 14, 256, dtype=np.uint32)
+    state = table.init(jnp.asarray(keys))
+    state = state.delete(jnp.asarray(keys[:24]))  # 24 deletes into 8 slots
+    assert int(state.tombstones.num_dropped) == 16
+    assert int(state.num_dropped) == 16
+
+
+@pytest.mark.parametrize("schema", SCHEMAS)
+def test_composed_program_single_outer_jit(mesh8, schema):
+    """build → insert → delete → plan_retrieve under ONE outer jax.jit.
+
+    The plan is built with explicit capacities (zero device work), so the
+    jitted program contains every table phase and must trace with no
+    device→host sync anywhere — a concretization attempt inside the trace
+    would raise.  Executes on the 8-way mesh at every schema width.
+    """
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 12, schema=schema)
+    rng = np.random.default_rng(3 + schema.key_lanes)
+    keys = _keys_for(schema, rng, 512)
+    vals = _values_for(schema, 0, 512)
+    ins = _keys_for(schema, rng, 64, lo=1 << 16, hi=1 << 17)
+    ins_vals = _values_for(schema, 5000, 64)
+    dels = keys[:32]
+    queries = np.concatenate([keys[:96], ins[:32]])
+
+    plan = table.plan_retrieve(
+        num_queries=len(queries), out_capacity=1024, seg_capacity=1024
+    )
+    qplan = table.plan_query(num_queries=len(queries))
+
+    @jax.jit
+    def program(k, v, ik, iv, dk, q):
+        st = table.init(k, v)
+        st = st.insert(ik, iv)
+        st = st.delete(dk)
+        return qplan(st, q), plan(st, q)
+
+    counts, res = program(
+        table.schema.pack_keys(keys),
+        jnp.asarray(vals),
+        table.schema.pack_keys(ins),
+        jnp.asarray(ins_vals),
+        table.schema.pack_keys(dels),
+        table.schema.pack_keys(queries),
+    )
+    assert int(res.num_dropped) == 0
+
+    oracle = Oracle()
+    oracle.insert(keys, vals)
+    oracle.insert(ins, ins_vals)
+    oracle.delete(dels)
+    want = np.array([oracle.count(k) for k in queries], np.int32)
+    np.testing.assert_array_equal(np.asarray(counts), want)
+    per_q = retrieval_to_lists(res)
+    for i, k in enumerate(queries):
+        assert sorted(_value_rows(np.asarray(per_q[i])), key=repr) == oracle.values(k)
+
+
+def test_plan_survives_state_evolution(mesh8):
+    """One plan executes against states of different delta depth and after
+    compaction (jit re-keys on state structure, capacities stay fixed)."""
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 11)
+    rng = np.random.default_rng(23)
+    keys = rng.integers(0, 1 << 15, 512, dtype=np.uint32)
+    queries = jnp.asarray(keys[:128])
+    s0 = table.init(jnp.asarray(keys))
+    plan = table.plan_retrieve(s0, queries)  # counts-round sizing
+    r0 = plan(s0, queries)
+    assert int(r0.num_dropped) == 0
+    ins = rng.integers(1 << 15, 1 << 16, 16, dtype=np.uint32)  # disjoint range
+    s1 = s0.insert(jnp.asarray(ins))
+    s2 = s1.delete(jnp.asarray(ins[:8]))  # touches nothing in the query set
+    r2 = plan(s2, queries)
+    assert int(r2.num_dropped) == 0
+    np.testing.assert_array_equal(np.asarray(r0.counts), np.asarray(r2.counts))
+    r3 = plan(s2.compact(), queries)
+    np.testing.assert_array_equal(np.asarray(r0.counts), np.asarray(r3.counts))
+
+
+def test_plan_out_capacity_exact(mesh8):
+    """Count-first planning sizes the output CSR exactly (ROADMAP item)."""
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 11)
+    rng = np.random.default_rng(31)
+    base = rng.choice(np.arange(1 << 15, dtype=np.uint32), size=128, replace=False)
+    keys = np.repeat(base, rng.integers(1, 9, size=128))
+    keys = np.concatenate([keys, base[: (-len(keys)) % 8]])
+    state = table.init(jnp.asarray(keys))
+    queries = np.concatenate([base[:120], np.full(8, base[0], np.uint32)])
+    seg, out = table.plan_caps(state, jnp.asarray(queries))
+    # exact: max per-device total result count over the 8 query shards
+    cnt = Counter(keys.tolist())
+    n_local = len(queries) // 8
+    per_dev = [
+        sum(cnt[int(k)] for k in queries[s * n_local : (s + 1) * n_local])
+        for s in range(8)
+    ]
+    assert out == max(per_dev)
+    res = table.retrieve(state, jnp.asarray(queries))  # planned caps
+    assert int(res.num_dropped) == 0
+    # the output buffer is the lane-rounded exact size, not a 2x guess
+    assert res.values.shape[0] // 8 == max(8, -(-out // 8) * 8)
+    assert seg >= max(per_dev) // 8  # sanity: seg covers the widest block
+
+
+def test_legacy_state_lift_equivalence(mesh8):
+    """Shims accept a bare DistributedHashGraph and a TableState equally."""
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 11)
+    rng = np.random.default_rng(37)
+    keys = rng.integers(0, 1 << 15, 512, dtype=np.uint32)
+    queries = jnp.asarray(keys[:64])
+    dhg = table.build(jnp.asarray(keys))  # legacy: bare graph
+    st = table.init(jnp.asarray(keys))  # new: versioned state
+    assert isinstance(st, TableState)
+    np.testing.assert_array_equal(
+        np.asarray(table.query(dhg, queries)), np.asarray(table.query(st, queries))
+    )
+    a = table.retrieve(dhg, queries, out_capacity=512, seg_capacity=512)
+    b = table.retrieve(st, queries, out_capacity=512, seg_capacity=512)
+    np.testing.assert_array_equal(np.asarray(a.values), np.asarray(b.values))
+    np.testing.assert_array_equal(np.asarray(a.offsets), np.asarray(b.offsets))
+    # deleting on a lifted legacy state grows the tombstone buffer lazily
+    st2 = table.delete(dhg, queries[:8])
+    assert int(st2.tombstones.count) == 8
+    assert (np.asarray(table.query(st2, queries))[:8] == 0).all()

@@ -1,0 +1,73 @@
+"""Hypothesis property tests for the versioned mutation API.
+
+Random insert/delete sequences against a multiset oracle, with
+compact-equivalence checked at the end of every sequence.  Fixed shapes
+(key/batch/query counts) keep the whole run on a handful of jit cache
+entries; hypothesis drives the data and the operation order.  Skipped
+cleanly when hypothesis is absent (see requirements-dev.txt).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schema import TableSchema
+from repro.core.table import DistributedHashTable
+from test_table_state import Oracle, _keys_for, _values_for  # same-dir module
+
+_PN, _PBATCH, _PQ = 256, 16, 64
+
+
+def check_mutation_sequence(seed, ops, schema, mesh):
+    """Apply a random insert/delete sequence; counts match the oracle at every
+    step; the compacted final state answers identically to the delta'd one."""
+    table = DistributedHashTable(
+        mesh, ("d",), hash_range=1 << 10, schema=schema, max_deltas=len(ops) + 1
+    )
+    rng = np.random.default_rng(seed)
+    universe = _keys_for(schema, rng, 64, hi=1 << 10)  # small -> real collisions
+    keys = rng.choice(universe, size=_PN)
+    vals = _values_for(schema, 0, _PN)
+    oracle = Oracle()
+    oracle.insert(keys, vals)
+    state = table.init(table.schema.pack_keys(keys), values=jnp.asarray(vals))
+    queries = rng.choice(universe, size=_PQ)
+    q = table.schema.pack_keys(queries)
+
+    for step, op in enumerate(ops):
+        batch = rng.choice(universe, size=_PBATCH)
+        if op == "insert":
+            bvals = _values_for(schema, 1000 * (step + 1), _PBATCH)
+            state = state.insert(table.schema.pack_keys(batch), jnp.asarray(bvals))
+            oracle.insert(batch, bvals)
+        else:
+            state = state.delete(table.schema.pack_keys(batch))
+            oracle.delete(batch)
+        counts = np.asarray(table.query(state, q))
+        want = np.array([oracle.count(k) for k in queries], np.int32)
+        np.testing.assert_array_equal(counts, want)
+
+    final = np.asarray(table.query(state, q))
+    compacted = state.compact()
+    assert int(compacted.base.num_dropped) == 0
+    np.testing.assert_array_equal(np.asarray(table.query(compacted, q)), final)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    ops=st.lists(st.sampled_from(["insert", "delete"]), min_size=1, max_size=4),
+)
+def test_mutation_sequence_property_u32(seed, ops, mesh8):
+    check_mutation_sequence(seed, ops, TableSchema("uint32", 1), mesh8)
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    ops=st.lists(st.sampled_from(["insert", "delete"]), min_size=1, max_size=3),
+)
+def test_mutation_sequence_property_u64(seed, ops, mesh8):
+    check_mutation_sequence(seed, ops, TableSchema("uint64", 2), mesh8)

@@ -1,7 +1,6 @@
 """Trainer integration: convergence, crash/restart, microbatch equivalence."""
 import dataclasses
 
-import jax
 import numpy as np
 import pytest
 
