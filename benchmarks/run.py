@@ -33,6 +33,8 @@ BENCHES = [
     ("benchmarks.bench_widths", ["--keys", "131072"], 8),
     # versioned state: insert/delete/compact throughput vs delta depth
     ("benchmarks.bench_updates", ["--keys", "131072"], 8),
+    # single-route layered execution: fused vs legacy routing vs delta depth
+    ("benchmarks.bench_layers", ["--keys", "131072"], 8),
     # §5 SOTA comparison
     ("benchmarks.bench_sota_table", ["--keys", "262144"], 8),
     # framework extra: LM step cost

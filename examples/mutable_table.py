@@ -55,6 +55,8 @@ def main() -> None:
     print(f"jitted program: drops {int(res2.num_dropped)}")
 
     # ---- compaction: fold deltas + tombstones into a fresh base -----------
+    # capacity=None sizes the rebuild from a live-count round (rows that
+    # survive the fold), so steady update/compact cycles keep the base flat.
     compacted = state.compact()
     assert compacted.epoch == 0
     same = np.array_equal(
@@ -62,6 +64,21 @@ def main() -> None:
         np.asarray(table.query(compacted, queries)),
     )
     print(f"compacted: 1 layer again, answers identical = {same}")
+
+    # ---- auto-compaction: fold when the state says it is due ---------------
+    # should_compact() fires on a full delta ring, a tombstone-load
+    # threshold, or tombstone overflow; insert(..., auto_compact=True)
+    # folds first instead of raising "delta ring full".  Every read path
+    # stays single-route (one exchange round per query/retrieve, whatever
+    # the delta depth) because inserts build deltas on the base's splits.
+    state = compacted
+    for step in range(3 * table.max_deltas):
+        batch = jnp.asarray(rng.integers(0, n, size=64, dtype=np.uint32))
+        state = state.insert(batch, auto_compact=True)  # never raises
+    print(
+        f"after {3 * table.max_deltas} auto-compacting inserts: "
+        f"epoch {state.epoch}, should_compact={state.should_compact()}"
+    )
 
 
 if __name__ == "__main__":

@@ -218,14 +218,35 @@ def combine_ragged(
     Segment overflow (a block's runs exceeding ``seg_capacity``) is the
     *owner's* to report (see ``multi_hashgraph.retrieve_sharded``); this
     routine never hides it — the counts it returns are the true run lengths.
+
+    The whole return trip is **one** collective round: per peer, the int32
+    slot counts are bitcast into the segment's dtype and concatenated onto
+    the flattened value segment, so a single all-to-all ships both (split
+    and bitcast back on arrival).  Non-32-bit payloads fall back to two
+    rounds.
     """
     d, cap = route.num_dest, route.capacity
     seg_cap = seg_values.shape[1]
     rest = seg_values.shape[2:]
-    back_counts = all_to_all_hierarchical(
-        slot_counts.astype(jnp.int32).reshape(d, cap), axis_names
-    )
-    back_vals = all_to_all_hierarchical(seg_values, axis_names)
+    counts_i32 = slot_counts.astype(jnp.int32).reshape(d, cap)
+    if seg_values.dtype.itemsize == 4:
+        # Fused return: values and counts share one 32-bit lane buffer.
+        vals_flat = seg_values.reshape(d, -1)
+        cnts_cast = (
+            counts_i32
+            if vals_flat.dtype == jnp.int32
+            else jax.lax.bitcast_convert_type(counts_i32, vals_flat.dtype)
+        )
+        packed = jnp.concatenate([vals_flat, cnts_cast], axis=1)
+        back = all_to_all_hierarchical(packed, axis_names)
+        split = vals_flat.shape[1]
+        back_vals = back[:, :split].reshape(d, seg_cap, *rest)
+        back_counts = back[:, split:]
+        if back_counts.dtype != jnp.int32:
+            back_counts = jax.lax.bitcast_convert_type(back_counts, jnp.int32)
+    else:  # pragma: no cover - no 64-bit payloads in the current stack
+        back_counts = all_to_all_hierarchical(counts_i32, axis_names)
+        back_vals = all_to_all_hierarchical(seg_values, axis_names)
     # Owner o packed my block by the exclusive cumsum of my slots' counts —
     # recompute the identical offsets from the returned counts.
     block_off = jnp.cumsum(back_counts, axis=1) - back_counts

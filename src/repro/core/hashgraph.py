@@ -111,6 +111,52 @@ def match_epochs(
     return jnp.max(stamped, axis=1)
 
 
+def sort_tombstones(
+    ts_keys: jax.Array, ts_epochs: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Sort a tombstone buffer by (key, epoch) for binary-search lookup.
+
+    Duplicate keys (the same key deleted at several epochs) sort with epochs
+    ascending, so the *last* entry of a key's run carries its newest epoch —
+    exactly what :func:`match_epochs_sorted` reads.  Unused slots (EMPTY key,
+    epoch ``-1``) sort to the end: EMPTY is the maximal key value and valid
+    keys are required to be strictly smaller.
+    """
+    if ts_keys.shape[0] == 0:
+        return ts_keys, ts_epochs
+    key_cols = _cols(ts_keys)
+    sort_ops = tuple(reversed(key_cols))  # most-significant lane first
+    out = jax.lax.sort(
+        (*sort_ops, ts_epochs.astype(jnp.int32)), num_keys=len(sort_ops) + 1
+    )
+    sorted_keys = _from_cols(tuple(reversed(out[: len(key_cols)])), ts_keys.ndim)
+    return sorted_keys, out[-1]
+
+
+def match_epochs_sorted(
+    keys: jax.Array, ts_keys: jax.Array, ts_epochs: jax.Array
+) -> jax.Array:
+    """Newest tombstone epoch matching each key; ``-1`` where none match.
+
+    Sorted-index counterpart of :func:`match_epochs`: ``ts_keys``/``ts_epochs``
+    must come from :func:`sort_tombstones` (keys ascending, epochs ascending
+    within duplicate-key runs).  One branchless bisection per key —
+    ``O(M log T)`` instead of the broadcast compare's ``O(M * T)`` — which is
+    what keeps tombstone masking off the critical path for large delete
+    volumes (ROADMAP "tombstone scaling").
+    """
+    t = ts_keys.shape[0]
+    if t == 0:
+        return jnp.full(keys.shape[:1], -1, jnp.int32)
+    m = keys.shape[0]
+    lo = jnp.zeros((m,), jnp.int32)
+    hi = jnp.full((m,), t, jnp.int32)
+    right = _segment_searchsorted(ts_keys, lo, hi, keys, side="right")
+    idx = jnp.clip(right - 1, 0, t - 1)
+    hit = (right > 0) & rows_equal(ts_keys[idx], keys)
+    return jnp.where(hit, ts_epochs[idx].astype(jnp.int32), jnp.int32(-1))
+
+
 def rows_equal(a: jax.Array, b: jax.Array) -> jax.Array:
     """Row equality for 1-D or multi-lane key arrays (broadcasting)."""
     if a.ndim == 1 and b.ndim == 1:

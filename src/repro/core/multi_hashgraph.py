@@ -41,11 +41,21 @@ from repro.utils import cdiv
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=("local", "hash_splits", "num_dropped"),
-    meta_fields=("hash_range", "seed", "local_range_cap", "axis_names"),
+    meta_fields=("hash_range", "seed", "local_range_cap", "axis_names", "bucket_stride"),
 )
 @dataclasses.dataclass(frozen=True)
 class DistributedHashGraph:
-    """Per-device shard of the distributed table (inside shard_map)."""
+    """Per-device shard of the distributed table (inside shard_map).
+
+    ``bucket_stride`` coarsens the rebased-hash → local-bucket map:
+    ``bucket = clip((h - lo) // stride, 0, local_range_cap - 1)``.  The base
+    graph uses stride 1 (one bucket per hash value slot); delta graphs built
+    on the base's *frozen* splits shrink their offsets arrays by striding
+    instead of narrowing the hash range, which keeps routing identical
+    across the layer stack (the partition-coherence invariant behind
+    single-route layered execution).  Striding only lengthens bucket lists;
+    the sorted-bucket binary search absorbs it exactly like split clamping.
+    """
 
     local: HashGraph  # this device's CSR over its hash range
     hash_splits: jax.Array  # (D+1,) int32 — identical on all devices
@@ -54,6 +64,7 @@ class DistributedHashGraph:
     seed: int
     local_range_cap: int
     axis_names: tuple
+    bucket_stride: int = 1
 
 
 def default_capacity(n_local: int, num_devices: int, slack: float) -> int:
@@ -63,18 +74,38 @@ def default_capacity(n_local: int, num_devices: int, slack: float) -> int:
     return cdiv(cap, 8) * 8
 
 
+def _rebase_buckets(
+    h: jax.Array,
+    is_pad: jax.Array,
+    lo: jax.Array,
+    local_cap: int,
+    stride: int,
+) -> jax.Array:
+    """Rebased hash → local bucket id, sentinel keys → trash bucket.
+
+    Split off from the hashing so the fused layered paths hash a routed
+    batch once and rebase per layer (layers share ``hash_range``/``seed``
+    but may differ in ``local_cap``/``stride``).
+    """
+    rebased = h - lo
+    if stride != 1:
+        rebased = rebased // jnp.int32(stride)
+    rebased = jnp.clip(rebased, 0, local_cap - 1)
+    return jnp.where(is_pad, jnp.int32(local_cap), rebased)
+
+
 def _local_buckets(
     keys: jax.Array,
     lo: jax.Array,
     hash_range: int,
     local_cap: int,
     seed: int,
+    stride: int = 1,
 ) -> jax.Array:
-    """Rebasedhash → local bucket id, sentinel keys → trash bucket."""
+    """Rebased hash → local bucket id, sentinel keys → trash bucket."""
     h = hashing.hash_to_buckets(keys, hash_range, seed=seed)
-    rebased = jnp.clip(h - lo, 0, local_cap - 1)
     is_pad = hashgraph.is_empty_key(keys)
-    return jnp.where(is_pad, jnp.int32(local_cap), rebased)
+    return _rebase_buckets(h, is_pad, lo, local_cap, stride)
 
 
 def build_sharded(
@@ -88,6 +119,9 @@ def build_sharded(
     range_slack: float = 1.5,
     seed: int = hashing.DEFAULT_SEED,
     capacity: Optional[int] = None,
+    hash_splits: Optional[jax.Array] = None,
+    local_range_cap: Optional[int] = None,
+    bucket_stride: int = 1,
 ) -> DistributedHashGraph:
     """Build the distributed HashGraph from this device's local ``keys``.
 
@@ -97,7 +131,16 @@ def build_sharded(
     from the balanced-split histogram and the overflow count, spread
     round-robin over destinations, and land in the owner's trash bucket.
     ``capacity`` overrides the per-destination slot size (compaction passes
-    an allowance for the sentinel rows).  Call inside ``shard_map``.
+    an allowance for the sentinel rows).
+
+    ``hash_splits`` *freezes* the partitioning: phase 1 (histogram → psum →
+    balanced splits) is skipped entirely and the given split points route
+    the exchange.  This is how delta graphs stay partition-coherent with
+    their base — same hash range, same seed, same owners — so one query
+    dispatch serves the whole layer stack.  ``local_range_cap`` /
+    ``bucket_stride`` size the local bucket space (deltas stride the base's
+    bucket map down to O(batch) offsets instead of paying the base's
+    O(hash_range / D) arrays).  Call inside ``shard_map``.
     """
     axis_names = tuple(axis_names)
     keys = keys.astype(jnp.uint32)
@@ -112,11 +155,14 @@ def build_sharded(
     is_pad = hashgraph.is_empty_key(keys)
 
     # ---- Phase 1: partitioning --------------------------------------------
-    bins_g = num_bins or partition.choose_num_bins(hash_range, num_devices)
     h = hashing.hash_to_buckets(keys, hash_range, seed=seed)
-    hist = partition.local_bin_histogram(h, bins_g, hash_range, valid=~is_pad)
-    ghist = jax.lax.psum(hist, axis_names)
-    splits = partition.balanced_hash_splits(ghist, num_devices, hash_range)
+    if hash_splits is None:
+        bins_g = num_bins or partition.choose_num_bins(hash_range, num_devices)
+        hist = partition.local_bin_histogram(h, bins_g, hash_range, valid=~is_pad)
+        ghist = jax.lax.psum(hist, axis_names)
+        splits = partition.balanced_hash_splits(ghist, num_devices, hash_range)
+    else:
+        splits = hash_splits.astype(jnp.int32)  # frozen: no collective round
 
     # ---- Phase 2: reorganization ------------------------------------------
     dest = partition.destination_of(h, splits)
@@ -139,10 +185,13 @@ def build_sharded(
     )
 
     # ---- Phase 4: local HashGraph creation ---------------------------------
-    local_cap = int(cdiv(hash_range, num_devices) * range_slack)
+    if local_range_cap is None:
+        local_cap = int(cdiv(hash_range, num_devices) * range_slack)
+    else:
+        local_cap = int(local_range_cap)
     rank = exchange.my_rank(axis_names)
     lo = splits[rank]
-    buckets = _local_buckets(rkeys, lo, hash_range, local_cap, seed)
+    buckets = _local_buckets(rkeys, lo, hash_range, local_cap, seed, bucket_stride)
     local = hashgraph.build_from_buckets(
         rkeys, buckets, local_cap, rvalues, seed=seed, sort_within_bucket=True
     )
@@ -154,23 +203,25 @@ def build_sharded(
         seed=seed,
         local_range_cap=local_cap,
         axis_names=axis_names,
+        bucket_stride=bucket_stride,
     )
 
 
-def _route_queries(
+def _route_queries_once(
     dhg: DistributedHashGraph, queries: jax.Array, capacity_slack: float
-) -> tuple[jax.Array, exchange.Route, jax.Array, int]:
-    """Shared query-routing preamble (paper §3.3 phase 1).
+) -> tuple[jax.Array, exchange.Route, jax.Array, jax.Array, jax.Array, int]:
+    """The one exchange round of the query hot path (paper §3.3 phase 1).
 
-    Hash local queries, dispatch them to their owning shards by the *build*
-    splits, and rebase the received keys into local bucket ids.  Every query
-    path (count, retrieve, planning, query-side HashGraph) must route
-    through this one function: the planning round's correctness depends on
-    using the exact same capacity and slot layout as retrieval.
+    Hash local queries and dispatch them to their owning shards by the
+    *build* splits of ``dhg``.  On a partition-coherent layer stack this
+    single round serves every layer: the owner-side hash of the received
+    keys is layer-independent (same hash range and seed), and each layer
+    rebases it into its own bucket space via :func:`_rebase_buckets`.
 
-    Returns ``(rq, route, rbuckets, capacity)`` — received queries (padded
-    with the EMPTY sentinel), the reverse route, their local bucket ids, and
-    the per-(src, dst) slot capacity.
+    Returns ``(rq, route, rh, is_pad, lo, capacity)`` — received queries
+    (EMPTY-padded), the reverse route, their owner-side hash values, the
+    padding mask, this owner's split base, and the per-(src, dst) slot
+    capacity.
     """
     axis_names = dhg.axis_names
     queries = queries.astype(jnp.uint32)
@@ -183,8 +234,46 @@ def _route_queries(
         (queries,), dest, axis_names, capacity, fills=(jnp.uint32(EMPTY_KEY),)
     )
     lo = dhg.hash_splits[exchange.my_rank(axis_names)]
-    rbuckets = _local_buckets(rq, lo, dhg.hash_range, dhg.local_range_cap, dhg.seed)
+    rh = hashing.hash_to_buckets(rq, dhg.hash_range, seed=dhg.seed)
+    is_pad = hashgraph.is_empty_key(rq)
+    return rq, route, rh, is_pad, lo, capacity
+
+
+def _route_queries(
+    dhg: DistributedHashGraph, queries: jax.Array, capacity_slack: float
+) -> tuple[jax.Array, exchange.Route, jax.Array, int]:
+    """Single-graph routing preamble: :func:`_route_queries_once` plus this
+    graph's own bucket rebase.
+
+    Every per-layer query path (count, retrieve, planning, query-side
+    HashGraph) routes through this one function: the planning round's
+    correctness depends on using the exact same capacity and slot layout as
+    retrieval.  Returns ``(rq, route, rbuckets, capacity)``.
+    """
+    rq, route, rh, is_pad, lo, capacity = _route_queries_once(
+        dhg, queries, capacity_slack
+    )
+    rbuckets = _rebase_buckets(
+        rh, is_pad, lo, dhg.local_range_cap, dhg.bucket_stride
+    )
     return rq, route, rbuckets, capacity
+
+
+def _tombstone_epochs(
+    rq: jax.Array, tombstones: Optional[tuple[jax.Array, jax.Array]]
+) -> Optional[jax.Array]:
+    """Newest tombstone epoch per routed key, or None without tombstones.
+
+    ``tombstones`` is the *sorted* ``(keys, epochs)`` index of the versioned
+    table (``Tombstones.index()``): the lookup is one binary search per key
+    — O(R log T) per routed batch instead of the old O(R·T) broadcast
+    compare.  Computed once per routing round and shared by every layer's
+    mask (a tombstone with epoch ``e`` hides layers ``0..e``).
+    """
+    if tombstones is None:
+        return None
+    ts_keys, ts_epochs = tombstones
+    return hashgraph.match_epochs_sorted(rq, ts_keys, ts_epochs)
 
 
 def _mask_counts(
@@ -192,19 +281,22 @@ def _mask_counts(
     rq: jax.Array,
     tombstones: Optional[tuple[jax.Array, jax.Array]],
     layer_epoch: int,
+    match_e: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Zero counts of padding slots and of rows hidden by tombstones.
 
-    ``tombstones`` is the ``(ts_keys, ts_epochs)`` pair of the versioned
-    table (see ``repro.core.state``); a row is hidden from the layer with
-    epoch ``layer_epoch`` iff a matching tombstone with epoch >=
-    ``layer_epoch`` exists (deleted at or after this layer's creation).
+    ``tombstones`` is the sorted ``(keys, epochs)`` index
+    (``Tombstones.index()``); a row is hidden from the layer with epoch
+    ``layer_epoch`` iff a matching tombstone with epoch >= ``layer_epoch``
+    exists (deleted at or after this layer's creation).  ``match_e``
+    short-circuits the lookup with a precomputed per-key epoch (the fused
+    layered paths resolve it once per routed batch).
     """
     counts = jnp.where(hashgraph.is_empty_key(rq), 0, counts)
-    if tombstones is not None:
-        ts_keys, ts_epochs = tombstones
-        hidden = hashgraph.match_epochs(rq, ts_keys, ts_epochs) >= layer_epoch
-        counts = jnp.where(hidden, 0, counts)
+    if match_e is None:
+        match_e = _tombstone_epochs(rq, tombstones)
+    if match_e is not None:
+        counts = jnp.where(match_e >= layer_epoch, 0, counts)
     return counts
 
 
@@ -222,9 +314,9 @@ def query_sharded(
 
     Phases (paper §3.3 "Querying Multi-GPU HashGraph"): route queries by the
     *build* splits, count against the local shard, route counts back.
-    ``tombstones``/``layer_epoch`` mask rows deleted from this layer of a
-    versioned table (see :func:`_mask_counts`).  Returns an int32 array
-    aligned with ``queries``.
+    ``tombstones`` (the sorted ``Tombstones.index()`` pair) / ``layer_epoch``
+    mask rows deleted from this layer of a versioned table (see
+    :func:`_mask_counts`).  Returns an int32 array aligned with ``queries``.
     """
     axis_names = dhg.axis_names
     rq, route, rbuckets, _ = _route_queries(dhg, queries, capacity_slack)
@@ -244,20 +336,56 @@ def query_layers_sharded(
     queries: jax.Array,
     *,
     tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
-    **kw,
+    fused: Optional[bool] = None,
+    capacity_slack: float = 1.25,
+    paper_faithful_probe: bool = False,
+    max_probe: int = 64,
 ) -> jax.Array:
     """Merged multiplicity over a versioned stack of layers.
 
     ``layers`` is ``(base, delta_1, ..., delta_L)`` — layer ``i`` has epoch
     ``i``, so a tombstone stamped with epoch ``e`` hides layers ``0..e`` and
     leaves later inserts visible (delete-then-reinsert works).
+
+    ``fused`` selects single-route execution: one dispatch all-to-all and
+    one count return serve the whole stack (valid only when every layer
+    shares the base's splits — the ``TableState.coherent`` invariant; the
+    caller asserts it).  ``fused=False`` is the per-layer legacy path for
+    mixed-split stacks (L dispatches, L returns).  ``None`` auto-selects
+    fused only for the trivially coherent single-layer stack.
     """
-    total = jnp.zeros(queries.shape[0], jnp.int32)
+    layers = tuple(layers)
+    if fused is None:
+        fused = len(layers) == 1
+    if not fused:
+        total = jnp.zeros(queries.shape[0], jnp.int32)
+        for epoch, layer in enumerate(layers):
+            total = total + query_sharded(
+                layer,
+                queries,
+                tombstones=tombstones,
+                layer_epoch=epoch,
+                capacity_slack=capacity_slack,
+                paper_faithful_probe=paper_faithful_probe,
+                max_probe=max_probe,
+            )
+        return total
+
+    base = layers[0]
+    rq, route, rh, is_pad, lo, _ = _route_queries_once(base, queries, capacity_slack)
+    match_e = _tombstone_epochs(rq, tombstones)
+    total = jnp.zeros(rq.shape[0], jnp.int32)
     for epoch, layer in enumerate(layers):
-        total = total + query_sharded(
-            layer, queries, tombstones=tombstones, layer_epoch=epoch, **kw
-        )
-    return total
+        rb = _rebase_buckets(rh, is_pad, lo, layer.local_range_cap, layer.bucket_stride)
+        if paper_faithful_probe:
+            c = hashgraph.query_count_probe(
+                layer.local, rq, max_probe=max_probe, buckets=rb
+            )
+        else:
+            c = hashgraph.query_count_sorted(layer.local, rq, buckets=rb)
+        total = total + _mask_counts(c, rq, tombstones, epoch, match_e)
+    # One merged return trip carries the whole stack's counts.
+    return exchange.combine(total, route, base.axis_names, fill=jnp.int32(0))
 
 
 def contains_sharded(
@@ -387,6 +515,115 @@ def _retrieve_runs(
     return counts, starts, seg_flat, owner_dropped + route.num_dropped
 
 
+def _layer_run_descriptors(
+    layers: Sequence[DistributedHashGraph],
+    rq: jax.Array,
+    rh: jax.Array,
+    is_pad: jax.Array,
+    lo: jax.Array,
+    tombstones: Optional[tuple[jax.Array, jax.Array]],
+) -> tuple[jax.Array, jax.Array, tuple]:
+    """Owner-side batched locate across a partition-coherent layer stack.
+
+    One binary-search locate per layer against the *same* routed batch
+    (compute only — no communication), with each layer's run starts offset
+    into the concatenated value-table address space.  Tombstone epochs are
+    resolved once for the batch and reused by every layer's mask.
+
+    Returns ``(starts, counts, tables)``: ``(L, R)`` stacked descriptors
+    (``R`` = routed slots) addressing ``jnp.concatenate(tables)``.
+    """
+    match_e = _tombstone_epochs(rq, tombstones)
+    starts_l, counts_l, tables = [], [], []
+    off = 0
+    for epoch, layer in enumerate(layers):
+        rb = _rebase_buckets(rh, is_pad, lo, layer.local_range_cap, layer.bucket_stride)
+        s, c = hashgraph.query_locate(layer.local, rq, buckets=rb)
+        c = _mask_counts(c, rq, tombstones, epoch, match_e)
+        starts_l.append(s + off)
+        counts_l.append(c)
+        tables.append(layer.local.values)
+        off += layer.local.values.shape[0]
+    return jnp.stack(starts_l), jnp.stack(counts_l), tuple(tables)
+
+
+def _csr_gather_layers_ref(starts, counts, tables, capacity: int):
+    """jnp reference of ``kernels.ops.csr_gather_layers``: a vmapped
+    ``hashgraph.csr_gather`` over the *same* interleaved descriptors (the
+    packing order has exactly one definition —
+    ``kernels.ops.interleave_layer_runs``)."""
+    from repro.kernels.ops import interleave_layer_runs
+
+    starts_i, counts_i, table_cat = interleave_layer_runs(starts, counts, tables)
+    _, _, seg_values, seg_dropped = jax.vmap(
+        lambda a, b: hashgraph.csr_gather(a, b, table_cat, capacity)
+    )(starts_i, counts_i)
+    return seg_values, jnp.sum(seg_dropped)
+
+
+def _retrieve_parts_fused(
+    layers: tuple,
+    queries: jax.Array,
+    *,
+    seg_capacity: int,
+    out_capacity: int,
+    capacity_slack: float,
+    use_kernel: bool,
+    tombstones: Optional[tuple[jax.Array, jax.Array]],
+):
+    """Single-route merged retrieval over a partition-coherent layer stack.
+
+    One dispatch all-to-all routes the queries for *every* layer at once
+    (all layers share the base's splits); owner-side, the per-layer locates
+    run back-to-back on the routed batch and one fused gather packs each
+    routed query's runs — layer-minor, epoch order — into a single segment
+    per source device; one ragged return ships segments + per-slot totals
+    home.  Collective rounds per retrieve: 2, independent of delta depth
+    (previously ``~3·L``).
+    """
+    base = layers[0]
+    nlayers = len(layers)
+    axis_names = base.axis_names
+    num_devices = exchange.device_count(axis_names)
+    n_local = queries.shape[0]
+    rank = exchange.my_rank(axis_names)
+
+    rq, route, rh, is_pad, lo, capacity = _route_queries_once(
+        base, queries, capacity_slack
+    )
+    starts_lr, counts_lr, tables = _layer_run_descriptors(
+        layers, rq, rh, is_pad, lo, tombstones
+    )
+    # (L, D*cap) -> (L, D, cap): the gather's source axis is the dispatching
+    # device, its row axis the slot-major/layer-minor interleaved runs.
+    starts_lsn = starts_lr.reshape(nlayers, num_devices, capacity)
+    counts_lsn = counts_lr.reshape(nlayers, num_devices, capacity)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        seg_values, owner_dropped = kernel_ops.csr_gather_layers(
+            starts_lsn, counts_lsn, tables, capacity=seg_capacity
+        )
+    else:
+        seg_values, owner_dropped = _csr_gather_layers_ref(
+            starts_lsn, counts_lsn, tables, seg_capacity
+        )
+
+    # One ragged return: per-slot totals over the stack reconstruct, on the
+    # querier, exactly the interleaved offsets the owner packed with.
+    slot_totals = jnp.sum(counts_lr, axis=0)
+    counts, starts, seg_flat = exchange.combine_ragged(
+        seg_values, slot_totals, route, axis_names
+    )
+    offsets, slot_rows, values, out_dropped = _csr_gather_any(
+        starts, counts, seg_flat, out_capacity, use_kernel
+    )
+    num_dropped = jax.lax.psum(
+        owner_dropped + route.num_dropped + out_dropped, axis_names
+    )
+    return offsets, slot_rows, values, counts, num_dropped, rank, n_local
+
+
 def _retrieve_parts(
     layers: Sequence[DistributedHashGraph],
     queries: jax.Array,
@@ -396,25 +633,44 @@ def _retrieve_parts(
     capacity_slack: float = 1.25,
     use_kernel: Optional[bool] = None,
     tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+    fused: Optional[bool] = None,
 ):
     """Merged two-pass retrieval over a layer stack; returns the local CSR.
 
-    Runs :func:`_retrieve_runs` per layer (base epoch 0, delta ``i`` epoch
-    ``i``), then compacts all layers' returned runs into one output CSR in a
-    single gather: the per-layer ``(start, count)`` run descriptors are
-    interleaved query-major — rows ``(q*L .. q*L+L-1)`` of the gather are
-    query ``q``'s runs in layer order — so the standard ``csr_gather``
-    produces the merged values array directly and every L-th offset is the
-    per-query merged offset.
+    ``fused=True`` (valid only for partition-coherent stacks — the
+    ``TableState.coherent`` invariant) takes
+    :func:`_retrieve_parts_fused`: one exchange round for the whole stack.
+    ``fused=False`` is the legacy per-layer path for mixed-split stacks:
+    :func:`_retrieve_runs` per layer (base epoch 0, delta ``i`` epoch
+    ``i``), then one querier-side gather compacts all layers' returned runs
+    into the output CSR — the per-layer ``(start, count)`` run descriptors
+    are interleaved query-major, so the standard ``csr_gather`` produces
+    the merged values array directly and every L-th offset is the per-query
+    merged offset.  ``None`` auto-selects fused only for the trivially
+    coherent single-layer stack.
 
     ``use_kernel`` selects the Pallas ``csr_gather`` kernel for both gather
-    stages (None = auto: on for TPU, jnp elsewhere).
+    stages (None = auto: on for TPU, jnp elsewhere).  Both paths produce
+    identical outputs (same per-query epoch-order value runs).
     """
     layers = tuple(layers)
     nlayers = len(layers)
+    use_kernel = _use_kernel_default(use_kernel)
+    if fused is None:
+        fused = nlayers == 1
+    if fused:
+        return _retrieve_parts_fused(
+            layers,
+            queries,
+            seg_capacity=seg_capacity,
+            out_capacity=out_capacity,
+            capacity_slack=capacity_slack,
+            use_kernel=use_kernel,
+            tombstones=tombstones,
+        )
+
     axis_names = layers[0].axis_names
     n_local = queries.shape[0]
-    use_kernel = _use_kernel_default(use_kernel)
     rank = exchange.my_rank(axis_names)
 
     counts_l, starts_l, segs_l = [], [], []
@@ -484,12 +740,14 @@ def retrieve_layers_sharded(
     capacity_slack: float = 1.25,
     use_kernel: Optional[bool] = None,
     tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+    fused: Optional[bool] = None,
 ) -> ShardRetrieval:
     """Merged retrieval over a versioned layer stack (base + deltas).
 
     Per-query values concatenate layer runs in epoch order; tombstoned rows
-    are masked before the gather, so they consume no output capacity.  Call
-    inside ``shard_map``.
+    are masked before the gather, so they consume no output capacity.
+    ``fused`` selects single-route execution over a partition-coherent
+    stack (see :func:`_retrieve_parts`).  Call inside ``shard_map``.
     """
     offsets, _, values, counts, num_dropped, _, _ = _retrieve_parts(
         layers,
@@ -499,6 +757,7 @@ def retrieve_layers_sharded(
         capacity_slack=capacity_slack,
         use_kernel=use_kernel,
         tombstones=tombstones,
+        fused=fused,
     )
     return ShardRetrieval(
         offsets=offsets, values=values, counts=counts, num_dropped=num_dropped
@@ -537,6 +796,7 @@ def inner_join_layers_sharded(
     capacity_slack: float = 1.25,
     use_kernel: Optional[bool] = None,
     tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+    fused: Optional[bool] = None,
 ) -> ShardJoin:
     """Materialized inner join against a versioned layer stack.
 
@@ -550,6 +810,7 @@ def inner_join_layers_sharded(
         capacity_slack=capacity_slack,
         use_kernel=use_kernel,
         tombstones=tombstones,
+        fused=fused,
     )
     globl = rank.astype(jnp.int32) * n_local + query_idx
     query_idx = jnp.where(query_idx >= 0, globl, jnp.int32(-1))
@@ -647,15 +908,39 @@ def plan_caps_sharded(
     *,
     capacity_slack: float = 1.25,
     tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+    fused: Optional[bool] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """One counts round sizing both retrieval capacities over a layer stack.
 
     Returns replicated ``(seg_capacity, out_capacity)`` () int32 — the exact
     per-segment and per-device output widths a merged
-    :func:`retrieve_layers_sharded` needs to drop nothing.  Call inside
-    ``shard_map``.
+    :func:`retrieve_layers_sharded` needs to drop nothing.  ``fused`` must
+    match the execution path being planned for: fused retrieval packs *all*
+    layers' runs into one segment per source (seg sized by the per-source
+    totals summed over layers, one routing round), the legacy path one
+    segment per (layer, source) pair (per-layer max, L rounds).  Call
+    inside ``shard_map``.
     """
+    layers = tuple(layers)
     axis_names = tuple(layers[0].axis_names)
+    if fused is None:
+        fused = len(layers) == 1
+    if fused:
+        base = layers[0]
+        num_devices = exchange.device_count(axis_names)
+        rq, _, rh, is_pad, lo, capacity = _route_queries_once(
+            base, queries, capacity_slack
+        )
+        _, counts_lr, _ = _layer_run_descriptors(
+            layers, rq, rh, is_pad, lo, tombstones
+        )
+        block_totals = jnp.sum(
+            counts_lr.reshape(len(layers), num_devices, capacity), axis=(0, 2)
+        )
+        seg = jax.lax.pmax(jnp.max(block_totals).astype(jnp.int32), axis_names)
+        out = jnp.max(jax.lax.psum(block_totals, axis_names)).astype(jnp.int32)
+        return seg, out
+
     seg_need = jnp.int32(0)
     out_vec = jnp.int32(0)
     for epoch, layer in enumerate(layers):

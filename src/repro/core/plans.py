@@ -34,6 +34,7 @@ from functools import partial
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import multi_hashgraph
@@ -73,6 +74,7 @@ def dhg_specs(dhg: DistributedHashGraph) -> DistributedHashGraph:
         seed=dhg.seed,
         local_range_cap=dhg.local_range_cap,
         axis_names=ax,
+        bucket_stride=dhg.bucket_stride,
     )
 
 
@@ -83,7 +85,18 @@ def state_specs(state: TableState) -> TableState:
         deltas=tuple(dhg_specs(d) for d in state.deltas),
         tombstones=Tombstones(keys=P(), epochs=P(), count=P(), num_dropped=P()),
         table=state.table,
+        coherent=state.coherent,
     )
+
+
+def _fused(table, state: TableState) -> bool:
+    """Single-route layered execution?  Requires the partition-coherence
+    invariant (every delta on the base's splits); ``table.fused_routing=
+    False`` forces the per-layer legacy path (parity tests, A/B benches).
+    Static — both inputs are jit cache keys."""
+    if table.fused_routing is False:
+        return False
+    return state.coherent or len(state.deltas) == 0
 
 
 # ---------------------------------------------------------------------------
@@ -105,7 +118,8 @@ def exec_query(table, state: TableState, queries: jax.Array) -> jax.Array:
         return multi_hashgraph.query_layers_sharded(
             st.layers,
             q,
-            tombstones=st.tombstones.as_mask_args(),
+            tombstones=st.tombstones.index(),
+            fused=_fused(table, st),
             capacity_slack=table.capacity_slack,
             paper_faithful_probe=table.paper_faithful_probe,
             max_probe=table.max_probe,
@@ -128,7 +142,8 @@ def exec_join_size(table, state: TableState, queries: jax.Array) -> jax.Array:
         return multi_hashgraph.join_size_layers_sharded(
             st.layers,
             q,
-            tombstones=st.tombstones.as_mask_args(),
+            tombstones=st.tombstones.index(),
+            fused=_fused(table, st),
             capacity_slack=table.capacity_slack,
             paper_faithful_probe=table.paper_faithful_probe,
             max_probe=table.max_probe,
@@ -168,7 +183,8 @@ def exec_retrieve(
             out_capacity=out_capacity,
             capacity_slack=table.capacity_slack,
             use_kernel=table.use_kernel,
-            tombstones=st.tombstones.as_mask_args(),
+            tombstones=st.tombstones.index(),
+            fused=_fused(table, st),
         )
 
     return shard_map(
@@ -205,7 +221,8 @@ def exec_join(
             out_capacity=out_capacity,
             capacity_slack=table.capacity_slack,
             use_kernel=table.use_kernel,
-            tombstones=st.tombstones.as_mask_args(),
+            tombstones=st.tombstones.index(),
+            fused=_fused(table, st),
         )
 
     return shard_map(
@@ -226,7 +243,8 @@ def exec_plan_caps(table, state: TableState, queries: jax.Array):
             st.layers,
             q,
             capacity_slack=table.capacity_slack,
-            tombstones=st.tombstones.as_mask_args(),
+            tombstones=st.tombstones.index(),
+            fused=_fused(table, st),
         )
 
     return shard_map(
@@ -236,6 +254,38 @@ def exec_plan_caps(table, state: TableState, queries: jax.Array):
         out_specs=(P(), P()),
         check_vma=False,
     )(state, queries)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def exec_live_count(table, state: TableState) -> jax.Array:
+    """Global live (non-tombstoned, non-sentinel) row count: replicated ().
+
+    The counts round behind compaction sizing: ``compact()`` sizes the
+    rebuild from the rows that will actually survive instead of the
+    all-rows worst case, so steady-state insert/delete/compact cycles keep
+    the base arrays flat.
+    """
+
+    def body(st):
+        from repro.core.hashgraph import is_empty_key, match_epochs_sorted
+
+        ts_keys, ts_epochs = st.tombstones.index()
+        live = jnp.int32(0)
+        for epoch, layer in enumerate(st.layers):
+            k = layer.local.keys
+            dead = is_empty_key(k)
+            if ts_keys.shape[0]:
+                dead = dead | (match_epochs_sorted(k, ts_keys, ts_epochs) >= epoch)
+            live = live + jnp.sum(~dead).astype(jnp.int32)
+        return jax.lax.psum(live, tuple(table.axis_names))
+
+    return shard_map(
+        body,
+        mesh=table.mesh,
+        in_specs=(state_specs(state),),
+        out_specs=P(),
+        check_vma=False,
+    )(state)
 
 
 # ---------------------------------------------------------------------------

@@ -33,7 +33,7 @@ from typing import TYPE_CHECKING, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.hashgraph import EMPTY_KEY, match_epochs
+from repro.core.hashgraph import EMPTY_KEY, match_epochs, sort_tombstones
 from repro.core.multi_hashgraph import DistributedHashGraph
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
@@ -81,8 +81,20 @@ class Tombstones:
         )
 
     def as_mask_args(self) -> tuple[jax.Array, jax.Array]:
-        """The ``(ts_keys, ts_epochs)`` pair the sharded query paths take."""
+        """The raw ``(ts_keys, ts_epochs)`` pair (push/insertion order)."""
         return self.keys, self.epochs
+
+    def index(self) -> tuple[jax.Array, jax.Array]:
+        """Sorted tombstone index: ``(keys, epochs)`` ordered by key.
+
+        The pair every sharded query/retrieve/plan path takes: lookups
+        against it are per-key binary searches
+        (:func:`repro.core.hashgraph.match_epochs_sorted`, ``O(log T)``)
+        instead of the O(T) broadcast compare per routed batch.  Pure and
+        traceable — the sort costs ``O(T log T)`` once per operation, with
+        ``T`` the small, bounded tombstone capacity.
+        """
+        return sort_tombstones(self.keys, self.epochs)
 
 
 def empty_tombstones(capacity: int, key_lanes: int = 1) -> Tombstones:
@@ -99,7 +111,7 @@ def empty_tombstones(capacity: int, key_lanes: int = 1) -> Tombstones:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=("base", "deltas", "tombstones"),
-    meta_fields=("table",),
+    meta_fields=("table", "coherent"),
 )
 @dataclasses.dataclass(frozen=True)
 class TableState:
@@ -111,12 +123,22 @@ class TableState:
     ``table`` reference is static pytree metadata (the config that owns the
     mesh and jit caches), so ``state.insert(...)`` composes under an outer
     ``jax.jit`` exactly like ``table.insert(state, ...)``.
+
+    ``coherent`` stamps the partition-coherence invariant: every delta was
+    built on the *base's* frozen ``hash_splits`` (same hash range, same
+    seed), so one routing round serves the whole layer stack and the
+    executors take the fused single-route path.  States whose deltas own
+    independent splits (``coherent_deltas=False`` inserts, hand-assembled
+    stacks) carry ``coherent=False`` and fall back to per-layer routing.
+    Static pytree metadata — the flag keys the jit cache alongside the
+    delta count.
     """
 
     base: DistributedHashGraph
     deltas: tuple  # tuple[DistributedHashGraph, ...] — delta ring, epoch i+1
     tombstones: Tombstones
     table: "DistributedHashTable"  # static metadata
+    coherent: bool = True  # static: deltas share the base's hash_splits
 
     @property
     def epoch(self) -> int:
@@ -136,10 +158,41 @@ class TableState:
             total = total + d.num_dropped
         return total
 
+    def should_compact(
+        self, *, tombstone_load: float = 0.5, ring_full: bool = True
+    ) -> bool:
+        """Host-level compaction trigger: is this state due for a fold?
+
+        True when any of:
+
+        * the delta ring is full (``ring_full=True``) — the next ``insert``
+          would raise;
+        * the tombstone buffer's fill fraction reaches ``tombstone_load``;
+        * tombstones have already overflowed (``num_dropped > 0``) — deletes
+          were lost to capacity and only a compaction restores exactness.
+
+        Reads two scalars from device, so call it eagerly (e.g. between
+        update batches), never inside a jitted program.
+        """
+        ts = self.tombstones
+        if ring_full and len(self.deltas) >= self.table.max_deltas:
+            return True
+        if int(ts.num_dropped) > 0:
+            return True
+        if ts.capacity and int(ts.count) / ts.capacity >= tombstone_load:
+            return True
+        return False
+
     # -- functional mutation (forwarders to the owning table) ---------------
-    def insert(self, keys, values=None) -> "TableState":
-        """New state with one more delta holding ``keys``/``values``."""
-        return self.table.insert(self, keys, values)
+    def insert(self, keys, values=None, *, auto_compact: bool = False) -> "TableState":
+        """New state with one more delta holding ``keys``/``values``.
+
+        ``auto_compact=True`` folds the state first when
+        :meth:`should_compact` fires (ring full, tombstone load, or
+        tombstone overflow), so a steady insert/delete stream never hits
+        the delta-ring capacity error.  Host-syncing — eager use only.
+        """
+        return self.table.insert(self, keys, values, auto_compact=auto_compact)
 
     def delete(self, keys) -> "TableState":
         """New state with ``keys`` tombstoned at the current epoch."""

@@ -40,7 +40,12 @@ from repro.utils.compat import shard_map
 import numpy as np
 
 from repro.core import hashing, multi_hashgraph, plans
-from repro.core.hashgraph import EMPTY_KEY, HashGraph, is_empty_key, match_epochs
+from repro.core.hashgraph import (
+    EMPTY_KEY,
+    HashGraph,
+    is_empty_key,
+    match_epochs_sorted,
+)
 from repro.core.multi_hashgraph import (
     DistributedHashGraph,
     ShardJoin,
@@ -52,7 +57,13 @@ from repro.core.state import TableState, as_state, empty_tombstones
 from repro.utils import cdiv as _cdiv
 
 
-def _dhg_out_specs(axis_names: Sequence[str], hash_range: int, local_cap: int, seed: int):
+def _dhg_out_specs(
+    axis_names: Sequence[str],
+    hash_range: int,
+    local_cap: int,
+    seed: int,
+    bucket_stride: int = 1,
+):
     ax = tuple(axis_names)
     shard0 = P(ax)  # stack local shards along dim 0 in the global view
     local = HashGraph(
@@ -71,6 +82,7 @@ def _dhg_out_specs(axis_names: Sequence[str], hash_range: int, local_cap: int, s
         seed=seed,
         local_range_cap=local_cap,
         axis_names=ax,
+        bucket_stride=bucket_stride,
     )
 
 
@@ -84,6 +96,15 @@ class DistributedHashTable:
     TPU, jnp path elsewhere).  ``max_deltas`` bounds the insert delta ring
     and ``tombstone_capacity`` the delete buffer of the versioned state
     (see :class:`~repro.core.state.TableState`).
+
+    ``coherent_deltas`` (default True) builds every insert delta on the
+    base's *frozen* ``hash_splits`` — the partition-coherence invariant
+    that lets one exchange round serve the whole layer stack (single-route
+    layered execution).  ``False`` restores the pre-coherence behavior
+    (each delta gets its own narrowed hash range and splits), producing
+    mixed-split states that execute on the per-layer legacy path.
+    ``fused_routing=False`` forces the legacy path even on coherent states
+    (A/B benchmarking, parity tests); ``None`` auto-selects by state.
     """
 
     mesh: jax.sharding.Mesh
@@ -99,6 +120,8 @@ class DistributedHashTable:
     use_kernel: Optional[bool] = None
     max_deltas: int = 8
     tombstone_capacity: int = 1024
+    coherent_deltas: bool = True
+    fused_routing: Optional[bool] = None
 
     def __post_init__(self):
         self.axis_names = tuple(self.axis_names)
@@ -126,10 +149,19 @@ class DistributedHashTable:
     def _local_cap_for(self, hash_range: int) -> int:
         return int(_cdiv(hash_range, self.num_devices) * self.range_slack)
 
-    def _out_specs(self, hash_range: Optional[int] = None):
+    def _out_specs(
+        self,
+        hash_range: Optional[int] = None,
+        local_cap: Optional[int] = None,
+        bucket_stride: int = 1,
+    ):
         hr = self.hash_range if hash_range is None else hash_range
         return _dhg_out_specs(
-            self.axis_names, hr, self._local_cap_for(hr), self.seed
+            self.axis_names,
+            hr,
+            self._local_cap_for(hr) if local_cap is None else local_cap,
+            self.seed,
+            bucket_stride,
         )
 
     # -- build ----------------------------------------------------------------
@@ -227,41 +259,124 @@ class DistributedHashTable:
 
     # -- functional mutation (versioned state) --------------------------------
     def _delta_hash_range(self, num_keys: int) -> int:
-        """Hash range for a delta graph: sized to the batch, not the table.
+        """Hash range for a *legacy* (incoherent) delta graph: sized to the
+        batch, not the table.
 
-        Each delta owns its own splits and bucket space, so a small insert
-        does not pay the base table's O(hash_range / devices) offsets array.
+        Pre-coherence behavior (``coherent_deltas=False``): each delta owns
+        its own splits and bucket space, so a small insert does not pay the
+        base table's O(hash_range / devices) offsets array — at the price of
+        one routing round per delta on every later query.
         """
         return min(self.hash_range, max(256, 2 * num_keys))
 
-    def insert(self, state, keys, values=None) -> TableState:
+    def _delta_bucket_geometry(self, num_keys: int) -> tuple[int, int]:
+        """(local_range_cap, bucket_stride) for a partition-coherent delta.
+
+        Coherent deltas share the base's hash range and splits (routing
+        identity), but a small batch must not pay the base's
+        O(hash_range / D) offsets array — so the bucket map is *strided*:
+        ``stride`` consecutive base bucket slots fold into one delta bucket,
+        keeping the delta's offsets at O(batch) while build and query keep
+        using the identical deterministic map.  Striding only lengthens
+        bucket lists; the sorted-bucket binary search absorbs it.
+        """
+        target = max(128, _cdiv(2 * num_keys, self.num_devices))
+        stride = max(1, _cdiv(self.local_range_cap, target))
+        return _cdiv(self.local_range_cap, stride), stride
+
+    @partial(
+        jax.jit, static_argnums=0, static_argnames=("local_cap", "stride", "capacity")
+    )
+    def _build_delta_jit(
+        self,
+        keys: jax.Array,
+        values: jax.Array,
+        splits: jax.Array,
+        *,
+        local_cap: int,
+        stride: int,
+        capacity: Optional[int] = None,
+    ):
+        """Build one delta graph on the base's frozen splits (no phase-1
+        histogram/psum round — the splits ARE the partitioning)."""
+
+        def body(k, v, sp):
+            return multi_hashgraph.build_sharded(
+                k,
+                hash_range=self.hash_range,
+                axis_names=self.axis_names,
+                values=v,
+                capacity_slack=self.capacity_slack,
+                seed=self.seed,
+                capacity=capacity,
+                hash_splits=sp,
+                local_range_cap=local_cap,
+                bucket_stride=stride,
+            )
+
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(self._in_spec(), self._in_spec(), P()),
+            out_specs=self._out_specs(local_cap=local_cap, bucket_stride=stride),
+            check_vma=False,
+        )(keys, values, splits)
+
+    def insert(
+        self, state, keys, values=None, *, auto_compact: bool = False
+    ) -> TableState:
         """Functional insert: a new state with one more delta graph.
 
         ``keys``/``values`` follow the :meth:`build` contract (global
         arrays, ``N % devices == 0``).  Raises when the delta ring is full —
-        call :meth:`compact` first.  With ``values=None`` the default
-        payload is the row id *within this batch* (0..N-1).
+        call :meth:`compact` first, or pass ``auto_compact=True`` to fold
+        the state automatically whenever
+        :meth:`~repro.core.state.TableState.should_compact` fires (ring
+        full, tombstone load, or tombstone overflow; host-syncing — eager
+        use only).  With ``values=None`` the default payload is the row id
+        *within this batch* (0..N-1).
+
+        With ``coherent_deltas`` (the default) the delta is built on the
+        base's frozen ``hash_splits``, preserving the partition-coherence
+        invariant that keeps every later query/retrieve/plan at one routing
+        round regardless of delta depth.
         """
         st = as_state(self, state)
+        if auto_compact and st.should_compact():
+            st = self.compact(st)
         if len(st.deltas) >= self.max_deltas:
             raise RuntimeError(
                 f"delta ring full ({self.max_deltas} deltas); call compact() "
                 "to fold deltas into the base before inserting more"
             )
         keys = self.schema.pack_keys(keys)
-        dhr = self._delta_hash_range(keys.shape[0])
         if values is None:
             if self.schema.value_cols != 1:
                 raise ValueError(
                     f"schema has {self.schema.value_cols} value columns; "
                     "pass explicit values (the row-id default is 1-column)"
                 )
-            delta = self._build_jit(keys, hash_range=dhr)
+            values = jnp.arange(keys.shape[0], dtype=jnp.int32)
+        else:
+            values = self.schema.pack_values(values)
+        if self.coherent_deltas:
+            local_cap, stride = self._delta_bucket_geometry(keys.shape[0])
+            delta = self._build_delta_jit(
+                keys,
+                values,
+                st.base.hash_splits,
+                local_cap=local_cap,
+                stride=stride,
+            )
+            coherent = st.coherent
         else:
             delta = self._build_values_jit(
-                keys, self.schema.pack_values(values), hash_range=dhr
+                keys, values, hash_range=self._delta_hash_range(keys.shape[0])
             )
-        return dataclasses.replace(st, deltas=st.deltas + (delta,))
+            coherent = False  # mixed-split stack: per-layer routing from now on
+        return dataclasses.replace(
+            st, deltas=st.deltas + (delta,), coherent=coherent
+        )
 
     def delete(self, state, keys) -> TableState:
         """Functional delete: tombstone every current occurrence of ``keys``.
@@ -292,25 +407,48 @@ class DistributedHashTable:
 
         Pure rebuild (jit-composable): every layer's stored rows are masked
         to the EMPTY sentinel where tombstoned, concatenated live-rows-first,
-        and pushed through the standard four-phase build.  ``capacity``
-        overrides the per-destination slot size of the rebuild exchange (the
-        default allows for the worst case of every row live, so the new
-        base's arrays are ≈(1 + slack)× the concatenated layer capacity —
-        pass a tighter value when most rows are known dead).
+        and pushed through the standard four-phase build.
+
+        Sizing: with ``capacity=None`` on the eager path, one counts round
+        (``plans.exec_live_count``) measures the live (non-tombstoned) row
+        total and sizes both the post-exchange row budget and the rebuild's
+        per-destination slots from it — so steady-state insert/delete/compact
+        cycles keep the base arrays *flat* instead of growing by the
+        all-rows worst case every fold.  Under an outer ``jax.jit`` the
+        live count cannot be read back, so the worst-case sizing applies
+        (pass an explicit ``capacity`` to pin it).  ``capacity`` overrides
+        the per-destination slot size of the rebuild exchange either way.
         """
         st = as_state(self, state)
         # Per-DEVICE concatenated row count: layer arrays are global views,
         # the rebuild exchange sees one shard of each.
         n_cat = sum(layer.local.keys.shape[0] for layer in st.layers)
         n_cat_local = _cdiv(n_cat, self.num_devices)
+        rebuild_rows = None
         if capacity is None:
-            # Balanced share of the worst case (all rows live) plus a full
-            # round-robin allowance for the sentinel rows.
-            capacity = multi_hashgraph.default_capacity(
-                n_cat_local, self.num_devices, self.capacity_slack
-            ) + _cdiv(n_cat_local, self.num_devices)
+            tracing = any(
+                isinstance(x, jax.core.Tracer)
+                for x in jax.tree_util.tree_leaves(st)
+            )
+            if not tracing:
+                live = int(plans.exec_live_count(self, st))
+                live_local = _cdiv(live, self.num_devices)
+                # Post-deal per-device row budget: balanced live share plus
+                # the slack margin (skew beyond it is truncated — counted in
+                # num_dropped, never silent).
+                rebuild_rows = max(64, int(live_local * self.capacity_slack) + 8)
+                rebuild_rows = min(_cdiv(rebuild_rows, 8) * 8, n_cat_local)
+                capacity = multi_hashgraph.default_capacity(
+                    rebuild_rows, self.num_devices, self.capacity_slack
+                ) + _cdiv(rebuild_rows, self.num_devices)
+            else:
+                # Balanced share of the worst case (all rows live) plus a
+                # full round-robin allowance for the sentinel rows.
+                capacity = multi_hashgraph.default_capacity(
+                    n_cat_local, self.num_devices, self.capacity_slack
+                ) + _cdiv(n_cat_local, self.num_devices)
         capacity = _cdiv(capacity, 8) * 8
-        new_base = self._compact_jit(st, capacity=capacity)
+        new_base = self._compact_jit(st, capacity=capacity, rebuild_rows=rebuild_rows)
         return TableState(
             base=new_base,
             deltas=(),
@@ -318,16 +456,24 @@ class DistributedHashTable:
             table=self,
         )
 
-    @partial(jax.jit, static_argnums=0, static_argnames=("capacity",))
-    def _compact_jit(self, state: TableState, *, capacity: int):
+    @partial(
+        jax.jit, static_argnums=0, static_argnames=("capacity", "rebuild_rows")
+    )
+    def _compact_jit(
+        self,
+        state: TableState,
+        *,
+        capacity: int,
+        rebuild_rows: Optional[int] = None,
+    ):
         from repro.core import exchange
 
         def body(st):
-            ts_keys, ts_epochs = st.tombstones.as_mask_args()
+            ts_keys, ts_epochs = st.tombstones.index()
             keys_parts, vals_parts = [], []
             for epoch, layer in enumerate(st.layers):
                 k = layer.local.keys
-                hidden = match_epochs(k, ts_keys, ts_epochs) >= epoch
+                hidden = match_epochs_sorted(k, ts_keys, ts_epochs) >= epoch
                 dead = is_empty_key(k) | hidden
                 dead_b = dead[:, None] if k.ndim == 2 else dead
                 keys_parts.append(jnp.where(dead_b, jnp.uint32(EMPTY_KEY), k))
@@ -368,13 +514,32 @@ class DistributedHashTable:
             # Live rows first: exchange-capacity drops hit sentinels before
             # any real key (pack order within a destination is stable).
             order = jnp.argsort(is_empty_key(keys_cat).astype(jnp.int32), stable=True)
-            return self._build_body(
-                keys_cat[order],
-                vals_cat[order],
+            keys_cat = keys_cat[order]
+            vals_cat = vals_cat[order]
+            trunc_live = jnp.int32(0)
+            if rebuild_rows is not None and rebuild_rows < keys_cat.shape[0]:
+                # Live-count sizing: the post-deal rows beyond the budget are
+                # (statistically) all sentinels; any live row lost to skew is
+                # tallied into num_dropped below, never silently.
+                trunc_live = jnp.sum(
+                    ~is_empty_key(keys_cat[rebuild_rows:])
+                ).astype(jnp.int32)
+                keys_cat = keys_cat[:rebuild_rows]
+                vals_cat = vals_cat[:rebuild_rows]
+            built = self._build_body(
+                keys_cat,
+                vals_cat,
                 self.hash_range,
                 self.num_bins,
                 capacity,
             )
+            if rebuild_rows is not None:
+                built = dataclasses.replace(
+                    built,
+                    num_dropped=built.num_dropped
+                    + jax.lax.psum(trunc_live, self.axis_names),
+                )
+            return built
 
         return shard_map(
             body,

@@ -281,6 +281,68 @@ def csr_gather_batched(
     return jnp.minimum(offsets, capacity), row_idx, gathered, num_dropped
 
 
+def interleave_layer_runs(starts, counts, tables):
+    """Slot-major/layer-minor interleave of per-layer CSR run descriptors.
+
+    ``starts``/``counts`` are ``(L, S, N)`` with starts already offset into
+    the concatenated layer address space; returns ``(starts_i, counts_i,
+    table_cat)`` where the ``(S, N·L)`` descriptors place slot ``i``'s L
+    runs adjacently in epoch order.  This packing order is load-bearing —
+    the ragged return reconstructs segment offsets from per-slot totals
+    assuming exactly it — so both the Pallas path
+    (:func:`csr_gather_layers`) and the jnp reference in
+    ``multi_hashgraph`` share this one definition.
+    """
+    l, s_dim, n = counts.shape
+    table_cat = tables[0] if l == 1 else jnp.concatenate(tables, axis=0)
+    starts_i = starts.astype(jnp.int32).transpose(1, 2, 0).reshape(s_dim, n * l)
+    counts_i = counts.astype(jnp.int32).transpose(1, 2, 0).reshape(s_dim, n * l)
+    return starts_i, counts_i, table_cat
+
+
+@partial(
+    jax.jit, static_argnames=("capacity", "fill", "block_rows", "interpret")
+)
+def csr_gather_layers(
+    starts: jax.Array,
+    counts: jax.Array,
+    tables,
+    *,
+    capacity: int,
+    fill: int = -1,
+    block_rows: int = 8,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused owner-side gather across a layer stack: one launch for L·S CSRs.
+
+    ``starts``/``counts`` are ``(L, S, N)`` — for each of ``L`` layers, one
+    CSR gather problem per source device, with ``starts`` already offset
+    into the concatenated layer address space — and ``tables`` is the
+    per-layer tuple of value tables (``(T_l,)`` or ``(T_l, C)`` int32).
+    The per-layer descriptors are interleaved slot-major/layer-minor per
+    source (slot ``i``'s L runs are adjacent, epoch order), so each source's
+    output segment holds every routed query's *merged* layer runs
+    contiguously — exactly the packing a single ragged return trip needs.
+    One :func:`csr_gather_batched` grid over ``(sources, capacity tiles)``
+    with ``N·L`` rows per source replaces the L separate per-layer launch
+    rounds of the unfused path.
+
+    Returns ``(gathered, num_dropped)``: ``(S, capacity[, C])`` packed
+    segments and the () int32 total overflow across sources.
+    """
+    starts_i, counts_i, table_cat = interleave_layer_runs(starts, counts, tables)
+    _, _, gathered, num_dropped = csr_gather_batched(
+        starts_i,
+        counts_i,
+        table_cat,
+        capacity=capacity,
+        fill=fill,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+    return gathered, num_dropped
+
+
 @partial(
     jax.jit,
     static_argnames=(

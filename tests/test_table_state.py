@@ -270,6 +270,68 @@ def test_plan_out_capacity_exact(mesh8):
     assert seg >= max(per_dev) // 8  # sanity: seg covers the widest block
 
 
+def test_compact_sizing_stays_flat_at_steady_live_size(mesh8):
+    """Live-count compaction sizing: repeated insert/delete/compact cycles at
+    a steady live row count must NOT grow the base arrays (ROADMAP open
+    item — the worst-case sizing grew them ≈(1 + slack)× per cycle)."""
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 12)
+    rng = np.random.default_rng(41)
+    keys = rng.choice(
+        np.arange(1 << 14, dtype=np.uint32), size=1024, replace=False
+    )
+    state = table.init(jnp.asarray(keys))
+    live = list(keys)
+    sizes = []
+    for cycle in range(3):
+        fresh = rng.choice(
+            np.setdiff1d(
+                np.arange(1 << 14, dtype=np.uint32), np.array(live, np.uint32)
+            ),
+            size=256,
+            replace=False,
+        )
+        state = state.insert(jnp.asarray(fresh))
+        dead = np.array(live[:256], np.uint32)
+        state = state.delete(jnp.asarray(dead))
+        live = live[256:] + list(fresh)  # steady live size: 1024
+        state = state.compact()
+        assert int(state.num_dropped) == 0
+        sizes.append(int(state.base.local.values.shape[0]))
+        # spot-check correctness after each fold
+        q = np.concatenate([np.array(live[:32], np.uint32), dead[:8]])
+        want = np.array([1] * 32 + [0] * 8, np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(table.query(state, jnp.asarray(q))), want
+        )
+    assert sizes[0] == sizes[1] == sizes[2], sizes
+
+
+def test_should_compact_and_auto_compact(mesh8):
+    """should_compact fires on ring-full / tombstone-load / overflow, and
+    insert(auto_compact=True) folds instead of raising on a full ring."""
+    table = DistributedHashTable(
+        mesh8, ("d",), hash_range=1 << 10, max_deltas=2, tombstone_capacity=16
+    )
+    rng = np.random.default_rng(43)
+    state = table.init(jnp.asarray(rng.integers(0, 1 << 14, 256, dtype=np.uint32)))
+    assert not state.should_compact()
+    # tombstone load threshold
+    state = state.delete(jnp.asarray(rng.integers(0, 1 << 14, 8, dtype=np.uint32)))
+    assert state.should_compact(tombstone_load=0.5)
+    assert not state.should_compact(tombstone_load=0.9)
+    # ring-full trigger + auto_compact avoids the RuntimeError
+    for _ in range(2):
+        state = state.insert(
+            jnp.asarray(rng.integers(0, 1 << 14, 8, dtype=np.uint32))
+        )
+    assert state.should_compact(tombstone_load=1.1)  # ring full alone fires
+    state = state.insert(
+        jnp.asarray(rng.integers(0, 1 << 14, 8, dtype=np.uint32)),
+        auto_compact=True,
+    )
+    assert state.epoch == 1  # compacted, then inserted the new delta
+
+
 def test_legacy_state_lift_equivalence(mesh8):
     """Shims accept a bare DistributedHashGraph and a TableState equally."""
     table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 11)
