@@ -35,6 +35,9 @@ BENCHES = [
     ("benchmarks.bench_updates", ["--keys", "131072"], 8),
     # single-route layered execution: fused vs legacy routing vs delta depth
     ("benchmarks.bench_layers", ["--keys", "131072"], 8),
+    # serving engine: request-stream latency/throughput vs batching window,
+    # fold-vs-full-compact pause time
+    ("benchmarks.bench_serve", ["--keys", "32768"], 8),
     # §5 SOTA comparison
     ("benchmarks.bench_sota_table", ["--keys", "262144"], 8),
     # framework extra: LM step cost

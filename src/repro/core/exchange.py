@@ -190,7 +190,8 @@ def combine_ragged(
     slot_counts: jax.Array,
     route: Route,
     axis_names: Sequence[str],
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+    layer_counts: jax.Array = None,
+):
     """Inverse of :func:`dispatch` for *variable-fanout* answers (retrieval).
 
     :func:`combine` returns exactly one answer per dispatched row; retrieval
@@ -224,29 +225,56 @@ def combine_ragged(
     the flattened value segment, so a single all-to-all ships both (split
     and bitcast back on arrival).  Non-32-bit payloads fall back to two
     rounds.
+
+    ``layer_counts`` extends the same trick to the *per-layer* count
+    breakdown of a fused layered retrieval: an optional ``(L, D*capacity)``
+    int32 array of per-layer run lengths (laid out like ``slot_counts``,
+    one plane per layer) is bitcast and concatenated onto the same packed
+    buffer — still ONE all-to-all — and a fourth output ``per_layer`` of
+    shape ``(N, L)`` is returned, giving each dispatched row its result
+    count split by layer (zero for dropped rows).  The caller remains
+    responsible for ``slot_counts`` equalling the plane sum; this routine
+    ships both independently.
     """
     d, cap = route.num_dest, route.capacity
     seg_cap = seg_values.shape[1]
     rest = seg_values.shape[2:]
     counts_i32 = slot_counts.astype(jnp.int32).reshape(d, cap)
+    nlayers = 0
+    if layer_counts is not None:
+        nlayers = layer_counts.shape[0]
+        # (L, D*cap) -> (D, L*cap): each destination's planes pack together.
+        planes = (
+            layer_counts.astype(jnp.int32)
+            .reshape(nlayers, d, cap)
+            .swapaxes(0, 1)
+            .reshape(d, nlayers * cap)
+        )
     if seg_values.dtype.itemsize == 4:
         # Fused return: values and counts share one 32-bit lane buffer.
         vals_flat = seg_values.reshape(d, -1)
-        cnts_cast = (
-            counts_i32
+        cast = (
+            (lambda c: c)
             if vals_flat.dtype == jnp.int32
-            else jax.lax.bitcast_convert_type(counts_i32, vals_flat.dtype)
+            else (lambda c: jax.lax.bitcast_convert_type(c, vals_flat.dtype))
         )
-        packed = jnp.concatenate([vals_flat, cnts_cast], axis=1)
-        back = all_to_all_hierarchical(packed, axis_names)
+        parts = [vals_flat, cast(counts_i32)]
+        if nlayers:
+            parts.append(cast(planes))
+        back = all_to_all_hierarchical(jnp.concatenate(parts, axis=1), axis_names)
         split = vals_flat.shape[1]
         back_vals = back[:, :split].reshape(d, seg_cap, *rest)
-        back_counts = back[:, split:]
+        back_counts = back[:, split : split + cap]
+        back_planes = back[:, split + cap :]
         if back_counts.dtype != jnp.int32:
             back_counts = jax.lax.bitcast_convert_type(back_counts, jnp.int32)
+            back_planes = jax.lax.bitcast_convert_type(back_planes, jnp.int32)
     else:  # pragma: no cover - no 64-bit payloads in the current stack
         back_counts = all_to_all_hierarchical(counts_i32, axis_names)
         back_vals = all_to_all_hierarchical(seg_values, axis_names)
+        back_planes = (
+            all_to_all_hierarchical(planes, axis_names) if nlayers else None
+        )
     # Owner o packed my block by the exclusive cumsum of my slots' counts —
     # recompute the identical offsets from the returned counts.
     block_off = jnp.cumsum(back_counts, axis=1) - back_counts
@@ -258,4 +286,13 @@ def combine_ragged(
     starts_sorted = jnp.where(route.keep, starts_packed, 0)
     counts = jnp.empty_like(counts_sorted).at[route.perm].set(counts_sorted)
     starts = jnp.empty_like(starts_sorted).at[route.perm].set(starts_sorted)
-    return counts, starts, back_vals.reshape(d * seg_cap, *rest)
+    values = back_vals.reshape(d * seg_cap, *rest)
+    if not nlayers:
+        return counts, starts, values
+    # Per-layer breakdown: owner o's plane for my slot j sits at
+    # back_planes[o, l*cap + j]; unsort exactly like the totals.
+    bp = back_planes.reshape(d, nlayers, cap)
+    pl_sorted = bp[owner[:, None], jnp.arange(nlayers)[None, :], (route.slot % cap)[:, None]]
+    pl_sorted = jnp.where(route.keep[:, None], pl_sorted, 0)
+    per_layer = jnp.empty_like(pl_sorted).at[route.perm].set(pl_sorted)
+    return counts, starts, values, per_layer

@@ -1,0 +1,245 @@
+"""Incremental background compaction — fold the oldest layers, off the read path.
+
+``compact()`` folds the *whole* stack (all deltas + tombstones) into a
+fresh base through a full four-phase rebuild: a pre-balance all-to-all,
+the build exchange, and a re-histogram.  That is the right periodic
+flattening pass, but it is exactly what a serving loop must not run
+inline — the pause is proportional to the whole table.
+
+:func:`fold_oldest` is the incremental alternative: merge only the ``k``
+oldest delta layers into the base.  On a partition-coherent stack (the
+default — every delta built on the base's frozen ``hash_splits``) this is
+a *layer-local* rebuild (``multi_hashgraph.fold_layers_local``): each
+device already owns its hash range's rows in every layer, so the fold is
+pure local compute — **zero collective rounds** (regression-tested) and a
+pause proportional to the folded layers only, not the table.  The
+remaining deltas and the surviving tombstones shift down by ``k`` epochs
+and the stack keeps serving unchanged.
+
+:class:`CompactionPolicy` decides *when*: delta-depth, tombstone-load and
+dropped-rows triggers over a cheap :class:`TableStats` snapshot.  It
+generalizes ``TableState.should_compact()`` (which is now a thin shim over
+it) and is shared with the ``repro.serve_table`` server, which runs the
+policy against its shadow state between write batches — readers never see
+a fold, only the atomically published result.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import multi_hashgraph, plans
+from repro.core.hashgraph import EMPTY_KEY
+from repro.core.state import TableState, Tombstones
+from repro.utils.compat import shard_map
+
+
+# ---------------------------------------------------------------------------
+# Cheap state snapshot for policy decisions and server metrics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TableStats:
+    """Host-side snapshot of a :class:`TableState`'s maintenance signals.
+
+    Static structure (delta depth, allocated rows) comes for free; the
+    device reads are three scalars (tombstone fill, tombstone overflow,
+    total drops) — cheap enough to poll between update batches, never call
+    inside a jitted program.
+    """
+
+    delta_depth: int  # live deltas (static)
+    base_rows: int  # base local CSR rows × devices (allocated, static)
+    delta_rows: int  # sum of delta CSR rows (allocated, static)
+    tombstone_count: int  # used tombstone slots
+    tombstone_capacity: int  # allocated tombstone slots (static)
+    tombstone_dropped: int  # deletes lost to tombstone capacity
+    num_dropped: int  # total drops across builds + tombstones
+
+    @property
+    def tombstone_load(self) -> float:
+        """Tombstone fill fraction (0.0 on a zero-capacity buffer)."""
+        if not self.tombstone_capacity:
+            return 0.0
+        return self.tombstone_count / self.tombstone_capacity
+
+
+def collect_stats(state: TableState) -> TableStats:
+    """Read a :class:`TableStats` snapshot off ``state`` (host-syncing)."""
+    ts = state.tombstones
+    return TableStats(
+        delta_depth=len(state.deltas),
+        base_rows=int(state.base.local.keys.shape[0]),
+        delta_rows=sum(int(d.local.keys.shape[0]) for d in state.deltas),
+        tombstone_count=int(ts.count),
+        tombstone_capacity=ts.capacity,
+        tombstone_dropped=int(ts.num_dropped),
+        num_dropped=int(state.num_dropped),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Compaction policy — when to fold, and how much
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """Trigger thresholds for (incremental) compaction.
+
+    * ``max_delta_depth`` — fold when the delta ring reaches this depth
+      (``None`` disables; servers default it to ``table.max_deltas`` so an
+      insert never hits the ring-full error).
+    * ``tombstone_load`` — fold when the tombstone buffer's fill fraction
+      reaches this value.
+    * ``tombstone_overflow`` — fold when deletes were lost to tombstone
+      capacity (``num_dropped > 0`` on the buffer); only a *full* fold
+      frees every tombstone slot, so :meth:`fold_amount` escalates.
+    * ``max_dropped`` — fold when total dropped rows exceed this
+      (``None`` disables).
+    * ``fold_k`` — how many of the oldest deltas an incremental
+      maintenance pass merges (:func:`fold_oldest`'s ``k``).
+    """
+
+    max_delta_depth: Optional[int] = None
+    tombstone_load: float = 0.5
+    tombstone_overflow: bool = True
+    max_dropped: Optional[int] = None
+    fold_k: int = 2
+
+    def due(self, stats: TableStats) -> bool:
+        """Is a state with these stats due for compaction?"""
+        if (
+            self.max_delta_depth is not None
+            and stats.delta_depth >= self.max_delta_depth
+        ):
+            return True
+        return self.escalates(stats)
+
+    def escalates(self, stats: TableStats) -> bool:
+        """Does this state need a FULL compaction (not an incremental fold)?
+
+        True under tombstone or dropped-row pressure: partial folds only
+        free tombstones with epochs inside the folded prefix and *carry*
+        the folded layers' drop tally into the new base, so both pressures
+        want the full rebuild — and that holds even at delta depth 0
+        (tombstones and drops fold away only through ``compact()``).
+        """
+        if self.tombstone_overflow and stats.tombstone_dropped > 0:
+            return True
+        if (
+            stats.tombstone_capacity
+            and stats.tombstone_load >= self.tombstone_load
+        ):
+            return True
+        return self.max_dropped is not None and stats.num_dropped > self.max_dropped
+
+    def fold_amount(self, stats: TableStats) -> int:
+        """How many oldest layers to fold for a state with these stats.
+
+        Incremental (``fold_k``) by default; :meth:`escalates` promotes to
+        every delta (callers run the full ``compact()`` there, which also
+        handles the depth-0 tombstone-only case an oldest-k fold cannot).
+        """
+        if self.escalates(stats):
+            return stats.delta_depth
+        if not stats.delta_depth:
+            return 0
+        return min(max(1, self.fold_k), stats.delta_depth)
+
+
+# ---------------------------------------------------------------------------
+# fold_oldest — the incremental fold
+# ---------------------------------------------------------------------------
+
+
+def _remap_tombstones(ts: Tombstones, k: int) -> Tombstones:
+    """Shift a tombstone buffer past a fold of the ``k`` oldest deltas.
+
+    A tombstone with epoch ``e`` hides layers ``0..e``.  After the fold,
+    layers ``0..k`` are one new base with the masking already applied:
+    tombstones with ``e <= k`` are spent (and MUST be discarded — kept,
+    they would wrongly hide folded rows of later epochs), tombstones with
+    ``e > k`` keep hiding the surviving deltas at ``e - k``.  Survivors are
+    repacked to the front so ``push`` keeps appending densely; the
+    overflow tally is preserved (lost deletes stay lost until a caller
+    decides to trust a full rebuild).  Pure and traceable.
+    """
+    keep = ts.epochs > k
+    order = jnp.argsort(~keep, stable=True)  # survivors first
+    kept = keep[order]
+    keys = ts.keys[order]
+    kept_b = kept[:, None] if keys.ndim == 2 else kept
+    return Tombstones(
+        keys=jnp.where(kept_b, keys, jnp.uint32(EMPTY_KEY)),
+        epochs=jnp.where(kept, ts.epochs[order] - k, jnp.int32(-1)),
+        count=jnp.sum(keep).astype(jnp.int32),
+        num_dropped=ts.num_dropped,
+    )
+
+
+@partial(jax.jit, static_argnums=(0,), static_argnames=("k",))
+def exec_fold(table, state: TableState, *, k: int):
+    """Jitted layer-local fold: ``(new_base, remapped_tombstones)``.
+
+    Collective-free by construction (``fold_layers_local`` never leaves
+    the device) — the property the serving smoke test asserts on this
+    executor's jaxpr.
+    """
+
+    def body(st):
+        new_base = multi_hashgraph.fold_layers_local(
+            st.layers[: k + 1], tombstones=st.tombstones.index()
+        )
+        return new_base, _remap_tombstones(st.tombstones, k)
+
+    return shard_map(
+        body,
+        mesh=table.mesh,
+        in_specs=(plans.state_specs(state),),
+        out_specs=(
+            plans.dhg_specs(state.base),
+            Tombstones(keys=P(), epochs=P(), count=P(), num_dropped=P()),
+        ),
+        check_vma=False,
+    )(state)
+
+
+def fold_oldest(state: TableState, k: int) -> TableState:
+    """Merge the ``k`` oldest delta layers into the base; keep the rest.
+
+    The incremental counterpart of ``state.compact()``: the new state has
+    ``depth - k`` deltas, the surviving tombstones shifted down ``k``
+    epochs, and answers every query identically (oracle-tested against the
+    full compaction).  On a coherent stack the fold is layer-local — zero
+    collective rounds, pause proportional to the folded layers only — so a
+    server can run it against a shadow state while readers keep hitting
+    the previous snapshot.
+
+    The folded base's row allocation grows by the folded deltas' rows
+    (tombstoned rows become sentinels but keep their slots); a periodic
+    full ``compact()`` (live-count sized) re-flattens it.  Mixed-split
+    (incoherent) stacks cannot fold locally and fall back to the full
+    ``compact()``.  ``k <= 0`` is the identity; ``k`` is clamped to the
+    delta depth.
+    """
+    k = min(int(k), len(state.deltas))
+    if k <= 0:
+        return state
+    table = state.table
+    if not state.coherent:
+        return table.compact(state)
+    new_base, new_ts = exec_fold(table, state, k=k)
+    return TableState(
+        base=new_base,
+        deltas=state.deltas[k:],
+        tombstones=new_ts,
+        table=table,
+        coherent=True,
+    )

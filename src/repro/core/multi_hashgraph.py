@@ -397,7 +397,7 @@ def contains_sharded(
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("offsets", "values", "counts", "num_dropped"),
+    data_fields=("offsets", "values", "counts", "num_dropped", "layer_counts"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
@@ -411,12 +411,21 @@ class ShardRetrieval:
     same missing result), not an exact loss count — treat any nonzero value
     as "rerun with larger ``seg_capacity``/``out_capacity``".  Never
     silently truncated.
+
+    ``layer_counts`` is the optional per-layer provenance breakdown
+    (``retrieve(..., per_layer_counts=True)``): an ``(n_local_queries, L)``
+    int32 array with ``layer_counts[i].sum() == counts[i]`` — query ``i``'s
+    result count split by layer epoch (base first).  ``None`` unless
+    requested; on the fused path it rides home inside the same single
+    all-to-all as the values (the bitcast packing trick of
+    ``exchange.combine_ragged``), so requesting it adds no collective round.
     """
 
     offsets: jax.Array  # (n_local_queries + 1,) int32
     values: jax.Array  # (out_capacity,) int32
     counts: jax.Array  # (n_local_queries,) int32
     num_dropped: jax.Array  # () int32, global
+    layer_counts: Optional[jax.Array] = None  # (n_local_queries, L) int32
 
 
 @partial(
@@ -570,6 +579,7 @@ def _retrieve_parts_fused(
     capacity_slack: float,
     use_kernel: bool,
     tombstones: Optional[tuple[jax.Array, jax.Array]],
+    per_layer: bool = False,
 ):
     """Single-route merged retrieval over a partition-coherent layer stack.
 
@@ -580,6 +590,11 @@ def _retrieve_parts_fused(
     per source device; one ragged return ships segments + per-slot totals
     home.  Collective rounds per retrieve: 2, independent of delta depth
     (previously ``~3·L``).
+
+    ``per_layer=True`` additionally returns the per-layer count breakdown
+    (``(n_local, L)``): the owner's per-layer run-length planes are bitcast
+    into the same fused return buffer (``exchange.combine_ragged``'s
+    ``layer_counts``), so provenance costs zero extra collective rounds.
     """
     base = layers[0]
     nlayers = len(layers)
@@ -612,16 +627,22 @@ def _retrieve_parts_fused(
     # One ragged return: per-slot totals over the stack reconstruct, on the
     # querier, exactly the interleaved offsets the owner packed with.
     slot_totals = jnp.sum(counts_lr, axis=0)
-    counts, starts, seg_flat = exchange.combine_ragged(
-        seg_values, slot_totals, route, axis_names
-    )
+    layer_breakdown = None
+    if per_layer:
+        counts, starts, seg_flat, layer_breakdown = exchange.combine_ragged(
+            seg_values, slot_totals, route, axis_names, layer_counts=counts_lr
+        )
+    else:
+        counts, starts, seg_flat = exchange.combine_ragged(
+            seg_values, slot_totals, route, axis_names
+        )
     offsets, slot_rows, values, out_dropped = _csr_gather_any(
         starts, counts, seg_flat, out_capacity, use_kernel
     )
     num_dropped = jax.lax.psum(
         owner_dropped + route.num_dropped + out_dropped, axis_names
     )
-    return offsets, slot_rows, values, counts, num_dropped, rank, n_local
+    return offsets, slot_rows, values, counts, num_dropped, rank, n_local, layer_breakdown
 
 
 def _retrieve_parts(
@@ -634,6 +655,7 @@ def _retrieve_parts(
     use_kernel: Optional[bool] = None,
     tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
     fused: Optional[bool] = None,
+    per_layer: bool = False,
 ):
     """Merged two-pass retrieval over a layer stack; returns the local CSR.
 
@@ -651,7 +673,9 @@ def _retrieve_parts(
 
     ``use_kernel`` selects the Pallas ``csr_gather`` kernel for both gather
     stages (None = auto: on for TPU, jnp elsewhere).  Both paths produce
-    identical outputs (same per-query epoch-order value runs).
+    identical outputs (same per-query epoch-order value runs), including the
+    ``per_layer`` count breakdown (fused: shipped in the same all-to-all;
+    legacy: stacked from the per-layer return trips).
     """
     layers = tuple(layers)
     nlayers = len(layers)
@@ -667,6 +691,7 @@ def _retrieve_parts(
             capacity_slack=capacity_slack,
             use_kernel=use_kernel,
             tombstones=tombstones,
+            per_layer=per_layer,
         )
 
     axis_names = layers[0].axis_names
@@ -704,7 +729,10 @@ def _retrieve_parts(
     # route drops count lost query *rows* whose result count is unknown.
     # Zero iff nothing anywhere was truncated.
     num_dropped = jax.lax.psum(dropped + out_dropped, axis_names)
-    return offsets, query_idx, values, counts, num_dropped, rank, n_local
+    layer_breakdown = (
+        jnp.stack(counts_l, axis=1).astype(jnp.int32) if per_layer else None
+    )
+    return offsets, query_idx, values, counts, num_dropped, rank, n_local, layer_breakdown
 
 
 def retrieve_sharded(
@@ -741,15 +769,19 @@ def retrieve_layers_sharded(
     use_kernel: Optional[bool] = None,
     tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
     fused: Optional[bool] = None,
+    per_layer_counts: bool = False,
 ) -> ShardRetrieval:
     """Merged retrieval over a versioned layer stack (base + deltas).
 
     Per-query values concatenate layer runs in epoch order; tombstoned rows
     are masked before the gather, so they consume no output capacity.
     ``fused`` selects single-route execution over a partition-coherent
-    stack (see :func:`_retrieve_parts`).  Call inside ``shard_map``.
+    stack (see :func:`_retrieve_parts`).  ``per_layer_counts`` fills the
+    result's ``layer_counts`` provenance field (``(n_local, L)``); on the
+    fused path the planes ride the same single all-to-all as the values.
+    Call inside ``shard_map``.
     """
-    offsets, _, values, counts, num_dropped, _, _ = _retrieve_parts(
+    offsets, _, values, counts, num_dropped, _, _, layer_counts = _retrieve_parts(
         layers,
         queries,
         seg_capacity=seg_capacity,
@@ -758,9 +790,14 @@ def retrieve_layers_sharded(
         use_kernel=use_kernel,
         tombstones=tombstones,
         fused=fused,
+        per_layer=per_layer_counts,
     )
     return ShardRetrieval(
-        offsets=offsets, values=values, counts=counts, num_dropped=num_dropped
+        offsets=offsets,
+        values=values,
+        counts=counts,
+        num_dropped=num_dropped,
+        layer_counts=layer_counts,
     )
 
 
@@ -802,7 +839,7 @@ def inner_join_layers_sharded(
 
     Call inside ``shard_map``.
     """
-    _, query_idx, values, counts, num_dropped, rank, n_local = _retrieve_parts(
+    _, query_idx, values, counts, num_dropped, rank, n_local, _ = _retrieve_parts(
         layers,
         queries,
         seg_capacity=seg_capacity,
@@ -994,3 +1031,81 @@ def join_size_layers_sharded(
     """Global inner-join cardinality against a versioned layer stack."""
     counts = query_layers_sharded(layers, queries, **kw)
     return jax.lax.psum(jnp.sum(counts), tuple(layers[0].axis_names))
+
+
+def fold_layers_local(
+    layers: Sequence[DistributedHashGraph],
+    *,
+    tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
+) -> DistributedHashGraph:
+    """Merge a partition-coherent layer prefix into one graph — NO exchange.
+
+    The incremental-compaction primitive: ``layers`` is the oldest prefix
+    ``(base, delta_1, ..., delta_k)`` of a coherent stack.  Because every
+    delta was built on the base's frozen ``hash_splits``, each device
+    already owns exactly the rows of its hash range *in every layer* — so
+    the fold is a purely local rebuild: mask tombstoned rows to the EMPTY
+    sentinel (per layer epoch, same rule as ``compact``), concatenate the
+    local rows, re-bucket through the base's deterministic map, and
+    counting-sort one fresh local CSR.  Zero collective rounds (the full
+    ``compact`` pays a round-robin pre-balance all-to-all plus the build
+    exchange) — which is what lets a serving loop run folds in the
+    background without ever touching the read path's collective budget.
+
+    ``tombstones`` is the *sorted* index pair (``Tombstones.index()``); a
+    tombstone with epoch ``e`` hides layer ``i`` (0-based position in
+    ``layers``) iff ``e >= i``.  The caller is responsible for remapping
+    the surviving tombstones of the wider stack (epochs ``> k`` shift down
+    by ``k`` — see ``repro.core.maintenance``).
+
+    Invalid for mixed-split stacks: rows of an incoherent delta live on
+    devices chosen by the *delta's* splits, so a local fold would break the
+    routing invariant.  Call inside ``shard_map``.
+    """
+    layers = tuple(layers)
+    base = layers[0]
+    keys_parts, vals_parts = [], []
+    dropped = base.num_dropped
+    for epoch, layer in enumerate(layers):
+        k = layer.local.keys
+        dead = hashgraph.is_empty_key(k)
+        if tombstones is not None and tombstones[0].shape[0]:
+            hidden = (
+                hashgraph.match_epochs_sorted(k, tombstones[0], tombstones[1])
+                >= epoch
+            )
+            dead = dead | hidden
+        dead_b = dead[:, None] if k.ndim == 2 else dead
+        keys_parts.append(jnp.where(dead_b, jnp.uint32(EMPTY_KEY), k))
+        vals_parts.append(layer.local.values)
+        if epoch:
+            dropped = dropped + layer.num_dropped
+    keys_cat = jnp.concatenate(keys_parts, axis=0)
+    vals_cat = jnp.concatenate(vals_parts, axis=0)
+    rank = exchange.my_rank(base.axis_names)
+    buckets = _local_buckets(
+        keys_cat,
+        base.hash_splits[rank],
+        base.hash_range,
+        base.local_range_cap,
+        base.seed,
+        base.bucket_stride,
+    )
+    local = hashgraph.build_from_buckets(
+        keys_cat,
+        buckets,
+        base.local_range_cap,
+        vals_cat,
+        seed=base.seed,
+        sort_within_bucket=True,
+    )
+    return DistributedHashGraph(
+        local=local,
+        hash_splits=base.hash_splits,
+        num_dropped=dropped,
+        hash_range=base.hash_range,
+        seed=base.seed,
+        local_range_cap=base.local_range_cap,
+        axis_names=base.axis_names,
+        bucket_stride=base.bucket_stride,
+    )

@@ -159,7 +159,9 @@ def exec_join_size(table, state: TableState, queries: jax.Array) -> jax.Array:
 
 
 @partial(
-    jax.jit, static_argnums=(0,), static_argnames=("out_capacity", "seg_capacity")
+    jax.jit,
+    static_argnums=(0,),
+    static_argnames=("out_capacity", "seg_capacity", "per_layer_counts"),
 )
 def exec_retrieve(
     table,
@@ -168,11 +170,22 @@ def exec_retrieve(
     *,
     out_capacity: int,
     seg_capacity: int,
+    per_layer_counts: bool = False,
 ) -> ShardRetrieval:
-    """Merged CSR retrieval over the versioned stack."""
+    """Merged CSR retrieval over the versioned stack.
+
+    ``per_layer_counts=True`` fills the result's ``layer_counts`` provenance
+    field (``(Nq, L)`` per-layer result counts); on the fused path the
+    breakdown ships inside the same single all-to-all as the values, so the
+    collective budget is unchanged (CI-asserted).
+    """
     ax = tuple(table.axis_names)
     out_specs = ShardRetrieval(
-        offsets=P(ax), values=P(ax), counts=P(ax), num_dropped=P()
+        offsets=P(ax),
+        values=P(ax),
+        counts=P(ax),
+        num_dropped=P(),
+        layer_counts=P(ax) if per_layer_counts else None,
     )
 
     def body(st, q):
@@ -185,6 +198,7 @@ def exec_retrieve(
             use_kernel=table.use_kernel,
             tombstones=st.tombstones.index(),
             fused=_fused(table, st),
+            per_layer_counts=per_layer_counts,
         )
 
     return shard_map(
@@ -329,6 +343,7 @@ class RetrievePlan(_PlanBase):
     num_queries: Optional[int]
     out_capacity: int
     seg_capacity: int
+    per_layer_counts: bool = False
 
     def __call__(self, state, queries) -> ShardRetrieval:
         st, q = self._prep(state, queries)
@@ -338,6 +353,7 @@ class RetrievePlan(_PlanBase):
             q,
             out_capacity=self.out_capacity,
             seg_capacity=self.seg_capacity,
+            per_layer_counts=self.per_layer_counts,
         )
 
 

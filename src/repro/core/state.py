@@ -158,6 +158,18 @@ class TableState:
             total = total + d.num_dropped
         return total
 
+    def stats(self):
+        """Cheap maintenance snapshot: a ``maintenance.TableStats``.
+
+        Delta depth, allocated base/delta rows, tombstone fill, and drop
+        tallies — the signals :class:`~repro.core.maintenance.
+        CompactionPolicy` and the ``serve_table`` server metrics read.
+        Three scalar device reads; call eagerly, never inside ``jax.jit``.
+        """
+        from repro.core.maintenance import collect_stats
+
+        return collect_stats(self)
+
     def should_compact(
         self, *, tombstone_load: float = 0.5, ring_full: bool = True
     ) -> bool:
@@ -171,17 +183,21 @@ class TableState:
         * tombstones have already overflowed (``num_dropped > 0``) — deletes
           were lost to capacity and only a compaction restores exactness.
 
-        Reads two scalars from device, so call it eagerly (e.g. between
+        Reads a few scalars from device, so call it eagerly (e.g. between
         update batches), never inside a jitted program.
+
+        .. deprecated:: thin shim over :class:`~repro.core.maintenance.
+           CompactionPolicy` (the thresholds' dataclass form, shared with
+           the ``serve_table`` server); this signature is kept for older
+           call sites.
         """
-        ts = self.tombstones
-        if ring_full and len(self.deltas) >= self.table.max_deltas:
-            return True
-        if int(ts.num_dropped) > 0:
-            return True
-        if ts.capacity and int(ts.count) / ts.capacity >= tombstone_load:
-            return True
-        return False
+        from repro.core.maintenance import CompactionPolicy
+
+        policy = CompactionPolicy(
+            max_delta_depth=self.table.max_deltas if ring_full else None,
+            tombstone_load=tombstone_load,
+        )
+        return policy.due(self.stats())
 
     # -- functional mutation (forwarders to the owning table) ---------------
     def insert(self, keys, values=None, *, auto_compact: bool = False) -> "TableState":

@@ -39,7 +39,7 @@ from repro.utils.compat import shard_map
 
 import numpy as np
 
-from repro.core import hashing, multi_hashgraph, plans
+from repro.core import hashing, multi_hashgraph, partition, plans
 from repro.core.hashgraph import (
     EMPTY_KEY,
     HashGraph,
@@ -105,6 +105,18 @@ class DistributedHashTable:
     mixed-split states that execute on the per-layer legacy path.
     ``fused_routing=False`` forces the legacy path even on coherent states
     (A/B benchmarking, parity tests); ``None`` auto-selects by state.
+
+    ``skew_guard`` (default True) protects coherent inserts from dispatch
+    overflow: a batch whose key distribution diverges from the base's
+    balanced splits can overflow the per-(source, destination) exchange
+    slots of the frozen-splits delta build (rows dropped, counted in
+    ``num_dropped``).  The guard predicts the overflow host-side from the
+    batch's histogram against the base's splits and, when it would fire,
+    falls back to an *incoherent* (legacy-routed) delta whose own balanced
+    splits absorb the skew — trading the fused routing invariant for zero
+    dropped rows.  Fallbacks are tallied in ``skew_fallbacks`` (surfaced
+    by ``serve_table`` server stats).  Eager inserts only: under an outer
+    ``jax.jit`` the histogram cannot be read back, so the guard is skipped.
     """
 
     mesh: jax.sharding.Mesh
@@ -122,6 +134,7 @@ class DistributedHashTable:
     tombstone_capacity: int = 1024
     coherent_deltas: bool = True
     fused_routing: Optional[bool] = None
+    skew_guard: bool = True
 
     def __post_init__(self):
         self.axis_names = tuple(self.axis_names)
@@ -135,6 +148,9 @@ class DistributedHashTable:
         self.local_range_cap = int(
             cdiv(self.hash_range, self.num_devices) * self.range_slack
         )
+        # Diagnostics counter (not part of the static jit identity): inserts
+        # routed to an incoherent delta by the skew guard.
+        self.skew_fallbacks = 0
 
     # -- sharding helpers ----------------------------------------------------
     def key_sharding(self) -> NamedSharding:
@@ -322,6 +338,43 @@ class DistributedHashTable:
             check_vma=False,
         )(keys, values, splits)
 
+    def _coherent_dispatch_overflows(self, keys: jax.Array, splits) -> bool:
+        """Predict per-(source, destination) slot overflow of a coherent
+        delta build for this batch (the delta-dispatch skew check).
+
+        Replays the exact routing the frozen-splits build would use — hash,
+        destination by the base's splits, EMPTY sentinels round-robin — and
+        histograms it per (source shard, destination) pair against the same
+        ``default_capacity`` slot size the build would allocate.  The
+        histogram and comparison run on device; only the one-boolean
+        verdict crosses to host.  Eager call sites only.
+        """
+        d = self.num_devices
+        n = keys.shape[0]
+        n_local = n // d
+        capacity = multi_hashgraph.default_capacity(
+            n_local, d, self.capacity_slack
+        )
+        verdict = self._skew_verdict_jit(
+            keys, jnp.asarray(splits), capacity=capacity
+        )
+        return bool(verdict)
+
+    @partial(jax.jit, static_argnums=0, static_argnames=("capacity",))
+    def _skew_verdict_jit(
+        self, keys: jax.Array, splits: jax.Array, *, capacity: int
+    ) -> jax.Array:
+        d = self.num_devices
+        n = keys.shape[0]
+        n_local = n // d
+        h = hashing.hash_to_buckets(keys, self.hash_range, seed=self.seed)
+        dest = partition.destination_of(h, splits)
+        rows = jnp.arange(n, dtype=jnp.int32)
+        dest = jnp.where(is_empty_key(keys), (rows % n_local) % d, dest)
+        pair = (rows // n_local) * d + dest  # (source shard, destination)
+        per_pair = jnp.zeros(d * d, jnp.int32).at[pair].add(1)
+        return jnp.any(per_pair > capacity)
+
     def insert(
         self, state, keys, values=None, *, auto_compact: bool = False
     ) -> TableState:
@@ -339,7 +392,9 @@ class DistributedHashTable:
         With ``coherent_deltas`` (the default) the delta is built on the
         base's frozen ``hash_splits``, preserving the partition-coherence
         invariant that keeps every later query/retrieve/plan at one routing
-        round regardless of delta depth.
+        round regardless of delta depth.  A batch skewed enough to overflow
+        the frozen-splits dispatch falls back to an incoherent delta instead
+        of dropping rows (``skew_guard``; counted in ``skew_fallbacks``).
         """
         st = as_state(self, state)
         if auto_compact and st.should_compact():
@@ -359,7 +414,20 @@ class DistributedHashTable:
             values = jnp.arange(keys.shape[0], dtype=jnp.int32)
         else:
             values = self.schema.pack_values(values)
-        if self.coherent_deltas:
+        coherent_build = self.coherent_deltas
+        if coherent_build and self.skew_guard:
+            tracing = any(
+                isinstance(x, jax.core.Tracer)
+                for x in jax.tree_util.tree_leaves((keys, st.base.hash_splits))
+            )
+            if not tracing and self._coherent_dispatch_overflows(
+                keys, st.base.hash_splits
+            ):
+                # Skewed batch: the frozen-splits dispatch would drop rows.
+                # A legacy-routed delta re-balances its own splits instead.
+                coherent_build = False
+                self.skew_fallbacks += 1
+        if coherent_build:
             local_cap, stride = self._delta_bucket_geometry(keys.shape[0])
             delta = self._build_delta_jit(
                 keys,
@@ -627,16 +695,20 @@ class DistributedHashTable:
         num_queries: Optional[int] = None,
         out_capacity: Optional[int] = None,
         seg_capacity: Optional[int] = None,
+        per_layer_counts: bool = False,
     ) -> RetrievePlan:
         """Build a pure ``(state, queries) -> ShardRetrieval`` callable.
 
-        Capacity contract: see :meth:`_plan_statics`.
+        Capacity contract: see :meth:`_plan_statics`.  ``per_layer_counts``
+        fills the result's ``layer_counts`` provenance field (same single
+        all-to-all on the fused path).
         """
         return RetrievePlan(
             self,
             *self._plan_statics(
                 "plan_retrieve", state, queries, num_queries, out_capacity, seg_capacity
             ),
+            per_layer_counts=per_layer_counts,
         )
 
     def plan_join(
@@ -689,6 +761,7 @@ class DistributedHashTable:
         *,
         out_capacity: Optional[int] = None,
         seg_capacity: Optional[int] = None,
+        per_layer_counts: bool = False,
     ) -> ShardRetrieval:
         """All stored values for every occurrence of every query key.
 
@@ -708,13 +781,23 @@ class DistributedHashTable:
         capacities (or use :meth:`plan_retrieve`).  Overflow is reported in
         ``num_dropped`` (replicated scalar) — never silently truncated.
 
+        ``per_layer_counts=True`` additionally returns the per-layer count
+        breakdown in ``.layer_counts`` (``(Nq, L)``, base first) — layer
+        provenance for versioned reads, shipped in the same all-to-all on
+        the fused path.
+
         .. deprecated:: thin shim over :meth:`plan_retrieve`.
         """
         st = as_state(self, state)
         q = self._pack_queries(queries)
         out_cap, seg_cap = self._resolve_caps(st, q, out_capacity, seg_capacity)
         return plans.exec_retrieve(
-            self, st, q, out_capacity=out_cap, seg_capacity=seg_cap
+            self,
+            st,
+            q,
+            out_capacity=out_cap,
+            seg_capacity=seg_cap,
+            per_layer_counts=per_layer_counts,
         )
 
     def inner_join(

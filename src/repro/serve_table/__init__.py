@@ -1,0 +1,33 @@
+"""Table serving engine — snapshot-swapped reads, micro-batched requests,
+incremental background compaction.
+
+Quickstart::
+
+    from repro.serve_table import TableServer
+
+    server = TableServer(table, keys, values)       # seqno-0 snapshot
+    server.submit_insert(new_keys, new_values)      # queued
+    server.step()                                   # applied + published
+    counts, seqno = server.query_many([q1, q2, q3]) # one fused execution
+    server.fold_async()                             # compaction off the read path
+
+See :mod:`repro.serve_table.server` for the serving design,
+:mod:`repro.serve_table.batcher` for the static-shape admission layer, and
+:mod:`repro.core.maintenance` for the fold/policy primitives underneath.
+"""
+from repro.core.maintenance import CompactionPolicy, TableStats, fold_oldest
+from repro.serve_table.batcher import BatcherStats, MicroBatcher
+from repro.serve_table.server import ServerStats, TableServer
+from repro.serve_table.snapshot import Snapshot, SnapshotRegistry
+
+__all__ = [
+    "BatcherStats",
+    "CompactionPolicy",
+    "MicroBatcher",
+    "ServerStats",
+    "Snapshot",
+    "SnapshotRegistry",
+    "TableServer",
+    "TableStats",
+    "fold_oldest",
+]

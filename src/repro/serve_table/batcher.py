@@ -1,0 +1,240 @@
+"""Query micro-batching — ragged request streams onto cached static shapes.
+
+The HashGraph lineage gets its throughput from large *static-shaped*
+batches: every executor in ``repro.core.plans`` is a jitted program keyed
+on ``(table, capacities, query count, state structure)``.  A serving
+workload is the opposite shape — a stream of small, ragged query/retrieve
+requests, each of which would trace (and compile) its own executor if
+executed naively.
+
+:class:`MicroBatcher` is the admission layer between the two: it
+
+1. **coalesces** a batch of variable-size requests into one flat query
+   array,
+2. **pads** it with EMPTY sentinels up to a **pow2-bucketed** static size
+   (sentinel queries cost nothing: they are masked to zero counts by the
+   routing layer, exactly like exchange padding), so the executor cache
+   key space is logarithmic in the request-size range,
+3. executes ONE fused plan over the whole batch, and
+4. **scatters** the CSR results back per request.
+
+Output capacities are bucketed the same way (next pow2 of the planning
+round's exact need), and the counts-planning sync runs once per bucket —
+steady traffic reuses compiled executors with zero per-request retraces
+(``cache_hits`` / ``cache_misses`` make this observable; tests assert on
+it).  Overflow (``num_dropped > 0`` from data drift within a bucket) is
+handled by bounded capacity doubling, never silently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashgraph import EMPTY_KEY
+from repro.core.state import as_state
+from repro.core.table import retrieval_to_lists
+from repro.utils import cdiv
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherStats:
+    """Counters of one :class:`MicroBatcher` (monotone, host-side)."""
+
+    requests: int  # individual requests served
+    batches: int  # coalesced executions
+    cache_hits: int  # executions reusing a cached (bucket, caps) plan
+    cache_misses: int  # executions that had to build (and trace) a plan
+    overflow_retries: int  # capacity-doubling re-executions
+    keys_served: int  # real (unpadded) query keys
+    keys_padded: int  # EMPTY sentinel keys shipped for shape bucketing
+
+    @property
+    def pad_fraction(self) -> float:
+        total = self.keys_served + self.keys_padded
+        return self.keys_padded / total if total else 0.0
+
+
+class MicroBatcher:
+    """Coalesce ragged read requests into plan-cache-hitting static batches.
+
+    ``min_bucket`` floors the padded batch size (also the compile-cache
+    floor); buckets are the next power of two of the coalesced total,
+    rounded up to a device multiple.  One batcher serves one table config.
+    Concurrent readers are safe but serialize through an internal lock for
+    the duration of a batch — the plan caches, working capacities, and
+    counters are shared mutable state (two threads racing a fresh bucket
+    would otherwise both run the blocking planning round and clobber each
+    other's doubled capacities); jax execution itself is serialized by the
+    dispatch lock anyway, so the batch lock costs no real parallelism.
+    """
+
+    def __init__(
+        self,
+        table,
+        *,
+        min_bucket: int = 64,
+        max_retries: int = 4,
+    ):
+        self.table = table
+        self.min_bucket = max(int(min_bucket), table.num_devices)
+        self.max_retries = int(max_retries)
+        self._batch_lock = threading.Lock()
+        self._qplans = {}  # bucket -> QueryPlan
+        self._rplans = {}  # (bucket, out_cap, seg_cap, per_layer) -> RetrievePlan
+        self._caps = {}  # bucket -> (out_cap, seg_cap) current working caps
+        self._requests = 0
+        self._batches = 0
+        self._hits = 0
+        self._misses = 0
+        self._retries = 0
+        self._keys_served = 0
+        self._keys_padded = 0
+
+    # -- shape bucketing -----------------------------------------------------
+    def bucket_size(self, total: int) -> int:
+        """Static batch size for ``total`` coalesced keys: pow2, device-aligned."""
+        b = max(self.min_bucket, total)
+        b = 1 << (b - 1).bit_length()
+        d = self.table.num_devices
+        return cdiv(b, d) * d
+
+    def _coalesce(self, requests: Sequence):
+        """Pack + concatenate + EMPTY-pad the request key arrays.
+
+        Returns ``(padded_queries, bounds)`` where ``bounds[i]`` is the
+        ``(start, stop)`` slice of request ``i`` in the flat batch.
+        """
+        packed = [self.table.schema.pack_keys(r) for r in requests]
+        bounds = []
+        off = 0
+        for p in packed:
+            bounds.append((off, off + p.shape[0]))
+            off += p.shape[0]
+        bucket = self.bucket_size(off)
+        lanes = self.table.schema.key_lanes
+        shape = (bucket,) if lanes == 1 else (bucket, lanes)
+        flat = np.full(shape, EMPTY_KEY, np.uint32)
+        cat = np.concatenate([np.asarray(p) for p in packed], axis=0)
+        flat[:off] = cat
+        self._keys_served += off
+        self._keys_padded += bucket - off
+        return jnp.asarray(flat), bounds
+
+    # -- read paths ----------------------------------------------------------
+    def query_many(self, state, requests: Sequence) -> list:
+        """Merged multiplicities for each request, one fused execution.
+
+        Returns one ``np.int32`` array per request, aligned with its keys.
+        """
+        if not requests:
+            return []
+        with self._batch_lock:
+            st = as_state(self.table, state)
+            q, bounds = self._coalesce(requests)
+            bucket = q.shape[0]
+            plan = self._qplans.get(bucket)
+            if plan is None:
+                plan = self.table.plan_query(num_queries=bucket)
+                self._qplans[bucket] = plan
+                self._misses += 1
+            else:
+                self._hits += 1
+            counts = np.asarray(plan(st, q))
+            self._requests += len(requests)
+            self._batches += 1
+            return [counts[a:b] for a, b in bounds]
+
+    def retrieve_many(
+        self, state, requests: Sequence, *, per_layer_counts: bool = False
+    ):
+        """All stored values for each request's keys, one fused execution.
+
+        Returns one list per request with one value array per key (the
+        ``retrieval_to_lists`` host view, sliced back per request).  With
+        ``per_layer_counts=True`` returns ``(values, layer_counts)`` pairs
+        per request instead, where ``layer_counts`` is the request's
+        ``(num_keys, L)`` provenance block.
+
+        Capacity lifecycle: the first batch of a bucket runs the exact
+        counts-planning round, then quantizes both capacities to powers of
+        two — later batches in the bucket reuse the compiled executor.  A
+        batch whose results outgrow the cached capacities (``num_dropped >
+        0``) doubles them (bounded by ``max_retries``) and re-executes;
+        the doubled caps become the bucket's new working set.
+        """
+        if not requests:
+            return []
+        with self._batch_lock:
+            st = as_state(self.table, state)
+            q, bounds = self._coalesce(requests)
+            bucket = q.shape[0]
+            caps = self._caps.get(bucket)
+            if caps is None:
+                seg_need, out_need = self.table.plan_caps(st, q)
+                caps = (_pow2(out_need), _pow2(seg_need))
+                self._caps[bucket] = caps
+            res, hit = self._exec_retrieve(st, q, bucket, caps, per_layer_counts)
+            for _ in range(self.max_retries):
+                if int(res.num_dropped) == 0:
+                    break
+                caps = (caps[0] * 2, caps[1] * 2)
+                self._caps[bucket] = caps
+                self._retries += 1
+                res, hit = self._exec_retrieve(st, q, bucket, caps, per_layer_counts)
+            if int(res.num_dropped) != 0:
+                # Never silent: the per-request scatter has no num_dropped
+                # field, so a truncated batch must fail loudly rather than
+                # hand back partially-missing value lists.
+                raise RuntimeError(
+                    f"retrieve batch still overflows after {self.max_retries} "
+                    f"capacity doublings (bucket {bucket}, out/seg caps {caps}, "
+                    f"num_dropped {int(res.num_dropped)}); raise max_retries or "
+                    "pre-warm the bucket with representative traffic"
+                )
+            if hit:
+                self._hits += 1
+            else:
+                self._misses += 1
+            self._requests += len(requests)
+            self._batches += 1
+            per_key = retrieval_to_lists(res)
+            out = [per_key[a:b] for a, b in bounds]
+            if not per_layer_counts:
+                return out
+            lc = np.asarray(res.layer_counts)
+            return [(vals, lc[a:b]) for vals, (a, b) in zip(out, bounds)]
+
+    def _exec_retrieve(self, st, q, bucket, caps, per_layer):
+        key = (bucket, caps[0], caps[1], per_layer)
+        plan = self._rplans.get(key)
+        hit = plan is not None
+        if plan is None:
+            plan = self.table.plan_retrieve(
+                num_queries=bucket,
+                out_capacity=caps[0],
+                seg_capacity=caps[1],
+                per_layer_counts=per_layer,
+            )
+            self._rplans[key] = plan
+        return plan(st, q), hit
+
+    # -- metrics --------------------------------------------------------------
+    def stats(self) -> BatcherStats:
+        return BatcherStats(
+            requests=self._requests,
+            batches=self._batches,
+            cache_hits=self._hits,
+            cache_misses=self._misses,
+            overflow_retries=self._retries,
+            keys_served=self._keys_served,
+            keys_padded=self._keys_padded,
+        )
+
+
+def _pow2(n) -> int:
+    n = int(n)
+    return 8 if n <= 8 else 1 << (n - 1).bit_length()

@@ -1,0 +1,449 @@
+"""TableServer — snapshot-swapped reads over a mutating distributed table.
+
+The serving loop the ROADMAP's "background compaction" item asks for:
+
+* **Readers** always execute against the last *published*
+  :class:`~repro.serve_table.snapshot.Snapshot` — an immutable
+  ``TableState`` behind a wait-free reference read — through the
+  :class:`~repro.serve_table.batcher.MicroBatcher` (pow2-bucketed static
+  shapes, cached plan executors).  Reads never block on mutation or
+  compaction: a fold can take as long as it likes, the read path keeps
+  hitting the previous snapshot until the new one is swapped in.
+* A **writer loop** pops queued insert/delete batches, applies them to a
+  private *shadow* state (``TableState`` mutations are functional — the
+  published snapshot is never touched), and publishes the result with a
+  fresh seqno.
+* **Incremental background compaction**: between write batches the writer
+  evaluates a :class:`~repro.core.maintenance.CompactionPolicy` against
+  the shadow's stats and runs :func:`~repro.core.maintenance.fold_oldest`
+  — a layer-local, zero-collective fold of the oldest deltas — either
+  inline (``maintain()``) or on a worker thread (``fold_async()``) while
+  reads keep flowing.  Policy escalations (tombstone pressure) run the
+  full live-count-sized ``compact()`` instead, which also re-flattens the
+  base arrays that incremental folds let grow.
+
+Threading contract: one writer driver (either the embedded ``start()``
+thread or an external caller invoking ``step()``/``maintain()``) plus any
+number of reader threads.  Readers never wait on writers or folds: the
+snapshot fetch is a wait-free reference read, and the only reader-side
+lock is the micro-batcher's own batch lock (readers serialize against
+*each other* for the duration of a fused batch — shared plan caches —
+which costs nothing real since jax execution is dispatch-serialized
+anyway).  Writer state (shadow, queue) is mutex-guarded; while a
+background fold is in flight the writer defers new applications (writes
+queue up) so the fold's rebase is trivially consistent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import maintenance
+from repro.core.hashgraph import EMPTY_KEY
+from repro.core.maintenance import CompactionPolicy, TableStats
+from repro.serve_table.batcher import BatcherStats, MicroBatcher
+from repro.serve_table.snapshot import Snapshot, SnapshotRegistry
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerStats:
+    """One coherent sample of the server's counters and state signals."""
+
+    seqno: int  # last published snapshot
+    pending_writes: int  # queued, not yet applied
+    writes_applied: int  # insert/delete batches applied to the shadow
+    reads: int  # individual read requests served
+    read_batches: int  # coalesced read executions
+    folds: int  # incremental fold_oldest passes
+    full_compacts: int  # full compact() escalations
+    fold_seconds_total: float
+    last_fold_seconds: float
+    fold_in_flight: bool  # a background fold is currently running
+    skew_fallbacks: int  # inserts routed incoherent by the skew guard
+    last_error: Optional[str]  # last write-application failure (None = healthy)
+    batcher: BatcherStats
+    shadow: TableStats  # maintenance signals of the writer's state
+
+
+class TableServer:
+    """Serve reads from published snapshots while a writer loop mutates.
+
+    ``keys``/``values`` build the initial table (the ``table.init``
+    contract).  ``policy`` defaults to folding ``fold_k`` oldest layers
+    whenever the delta ring reaches ``table.max_deltas`` (so an insert can
+    never hit the ring-full error) or tombstone pressure escalates to a
+    full compaction.  ``window`` is the latency/throughput knob: the
+    writer applies at most ``window`` queued mutation batches per step
+    before publishing, and readers using :meth:`query_many` /
+    :meth:`retrieve_many` choose their own coalescing width.
+    """
+
+    def __init__(
+        self,
+        table,
+        keys,
+        values=None,
+        *,
+        policy: Optional[CompactionPolicy] = None,
+        batcher: Optional[MicroBatcher] = None,
+        window: int = 8,
+    ):
+        self.table = table
+        state = table.init(*self._pad_insert(keys, values))
+        self.registry = SnapshotRegistry(state)
+        self.policy = policy or CompactionPolicy(
+            max_delta_depth=table.max_deltas
+        )
+        self.batcher = batcher or MicroBatcher(table)
+        self.window = max(1, int(window))
+        self._shadow = state
+        self._writes: deque = deque()
+        self._lock = threading.Lock()  # queue + shadow swaps
+        # Serializes every shadow mutation (step application vs background
+        # fold): a fold holds it for its whole duration, so a step that was
+        # already mid-application when fold_async was called finishes first
+        # and the fold reads the post-step shadow — applied writes are never
+        # discarded.  Readers never touch it.
+        self._writer_mutex = threading.Lock()
+        self._read_lock = threading.Lock()  # reader counters only
+        self._fold_thread: Optional[threading.Thread] = None
+        self._writer_thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._writes_applied = 0
+        self._last_error: Optional[str] = None
+        self._reads = 0
+        self._read_batches = 0
+        self._folds = 0
+        self._full_compacts = 0
+        self._fold_seconds = 0.0
+        self._last_fold_seconds = 0.0
+        self._skew_base = table.skew_fallbacks
+
+    # -- write path (admission) ----------------------------------------------
+    def _pad_insert(self, keys, values):
+        """Device-align one mutation batch: EMPTY-pad keys, -1-pad values.
+
+        The build/insert contract wants ``N % devices == 0``; sentinel rows
+        route round-robin, land in trash buckets, and are invisible to
+        every read — the same padding idiom as the exchange.
+        """
+        schema = self.table.schema
+        keys = schema.pack_keys(keys)
+        n = keys.shape[0]
+        if values is None:
+            values = np.arange(n, dtype=np.int32)
+            if schema.value_cols > 1:
+                values = np.stack(
+                    [values] * schema.value_cols, axis=1
+                )
+        values = schema.pack_values(values)
+        pad = (-n) % self.table.num_devices
+        if pad:
+            kshape = (pad,) + tuple(keys.shape[1:])
+            vshape = (pad,) + tuple(values.shape[1:])
+            keys = jnp.concatenate(
+                [keys, jnp.full(kshape, EMPTY_KEY, jnp.uint32)]
+            )
+            values = jnp.concatenate(
+                [values, jnp.full(vshape, -1, jnp.int32)]
+            )
+        return keys, values
+
+    def submit_insert(self, keys, values=None) -> None:
+        """Queue one insert batch (applied by the writer loop)."""
+        keys, values = self._pad_insert(keys, values)
+        with self._lock:
+            self._writes.append(("insert", keys, values))
+
+    def submit_delete(self, keys) -> None:
+        """Queue one delete batch (applied by the writer loop).
+
+        Batches are chunked to at most half the tombstone capacity so the
+        per-op policy check between chunks can escalate (freeing the
+        buffer) before any chunk could overflow it — one oversized batch
+        must not silently lose deletes.  Residual overflow under an
+        unusually permissive policy still surfaces in
+        ``stats().shadow.tombstone_dropped``.
+        """
+        keys = self.table.schema.pack_keys(keys)
+        chunk = max(1, self.table.tombstone_capacity // 2)
+        with self._lock:
+            for i in range(0, max(1, keys.shape[0]), chunk):
+                self._writes.append(("delete", keys[i : i + chunk], None))
+
+    def pending(self) -> int:
+        return len(self._writes)
+
+    def step(self) -> int:
+        """Apply up to ``window`` queued mutations to the shadow; publish.
+
+        Returns the number of batches applied (0 while a background fold
+        is in flight — writes stay queued, reads stay live).  Runs the
+        compaction policy *before* every mutation, so neither the delta
+        ring (inserts) nor the tombstone buffer (delete runs) can overflow
+        mid-stream while the policy's triggers are enabled.
+        """
+        # Non-blocking acquire keeps the documented contract even when a
+        # fold wins the race between the flag check and the mutex: the
+        # writes stay queued and the caller gets 0 instead of parking for
+        # the whole fold.
+        if self.fold_in_flight or not self._writer_mutex.acquire(blocking=False):
+            return 0
+        try:
+            applied = 0
+            # Lazy per-window stats: the device-read signals (tombstone
+            # fill/overflow, drop tallies) are collected once per window and
+            # re-read only after the ops that can move them (deletes,
+            # folds); the delta-depth trigger is tracked host-side.  An idle
+            # step() never touches the device.
+            stats = None
+            while applied < self.window:
+                with self._lock:
+                    if not self._writes:
+                        break
+                    op = self._writes.popleft()
+                try:
+                    if stats is None:
+                        stats = self._shadow.stats()
+                    if self.policy.due(stats):
+                        self._fold_shadow()
+                        stats = self._shadow.stats()
+                    kind, keys, values = op
+                    if kind == "insert":
+                        self._shadow = self.table.insert(self._shadow, keys, values)
+                        stats = dataclasses.replace(
+                            stats, delta_depth=len(self._shadow.deltas)
+                        )
+                    else:
+                        self._shadow = self.table.delete(self._shadow, keys)
+                        stats = None  # tombstone signals moved: re-read
+                except Exception as e:
+                    # An acknowledged write must never vanish: requeue it at
+                    # the front, surface the error in stats, and re-raise
+                    # (the embedded loop stops loudly; an external driver
+                    # sees the exception directly).
+                    with self._lock:
+                        self._writes.appendleft(op)
+                    self._last_error = f"{type(e).__name__}: {e}"
+                    if applied:
+                        self.registry.publish(self._shadow)
+                    raise
+                self._writes_applied += 1
+                applied += 1
+            if applied:
+                self.registry.publish(self._shadow)
+            return applied
+        finally:
+            self._writer_mutex.release()
+
+    # -- maintenance (off the read path) --------------------------------------
+    def maintain(self) -> bool:
+        """Fold the shadow now if the policy says it is due; publish.
+
+        Synchronous variant for deterministic drivers; the background
+        variant is :meth:`fold_async`.  Returns True iff a fold ran.
+        """
+        if self.fold_in_flight or not self._writer_mutex.acquire(blocking=False):
+            return False
+        try:
+            if not self.policy.due(self._shadow.stats()):
+                return False
+            ran = (self._folds, self._full_compacts)
+            self._fold_shadow()
+            if (self._folds, self._full_compacts) == ran:
+                return False  # due but nothing actionable: no phantom publish
+            self.registry.publish(self._shadow)
+            return True
+        finally:
+            self._writer_mutex.release()
+
+    def _fold_shadow(self) -> None:
+        stats = self._shadow.stats()
+        escalate = self.policy.escalates(stats)
+        k = self.policy.fold_amount(stats)
+        if not escalate and not k:
+            return
+        # An incoherent shadow (skew-guard fallback) cannot fold locally —
+        # fold_oldest would full-compact anyway; route it here so the pause
+        # is attributed to full_compacts, not folds.
+        if escalate or k >= stats.delta_depth or not self._shadow.coherent:
+            # Escalation: the full rebuild frees every tombstone (valid even
+            # at delta depth 0) and re-flattens the base arrays that
+            # incremental folds let grow.
+            self._apply_fold(self.table.compact, full=True)
+        else:
+            self._apply_fold(lambda s: maintenance.fold_oldest(s, k), full=False)
+
+    def _apply_fold(self, fold_fn, *, full: bool) -> None:
+        """Run one timed fold of the shadow and attribute the counter."""
+        t0 = time.perf_counter()
+        self._shadow = fold_fn(self._shadow)
+        if full:
+            self._full_compacts += 1
+        else:
+            self._folds += 1
+        self._last_fold_seconds = time.perf_counter() - t0
+        self._fold_seconds += self._last_fold_seconds
+
+    def fold_async(self, k: Optional[int] = None) -> threading.Thread:
+        """Start one background fold of the shadow; reads keep flowing.
+
+        The fold runs on a worker thread holding the shadow-mutation mutex
+        for its whole duration: a ``step()`` that was mid-application when
+        the fold started finishes first (the fold then reads the post-step
+        shadow — acknowledged writes are never discarded), later steps
+        defer until the fold lands (writes queue), and the folded state is
+        published atomically on completion.  Reads never touch the mutex.
+        Returns the thread (join it or poll :attr:`fold_in_flight`).
+        """
+        if self.fold_in_flight:
+            raise RuntimeError("a background fold is already in flight")
+
+        def run():
+            with self._writer_mutex:
+                ran_before = (self._folds, self._full_compacts)
+                if k is None:
+                    # Policy-driven: same decision tree as inline maintenance
+                    # (including the depth-0 tombstone-pressure escalation).
+                    self._fold_shadow()
+                else:
+                    kk = min(k, len(self._shadow.deltas))
+                    if kk <= 0:
+                        return
+                    if self._shadow.coherent and kk < len(self._shadow.deltas):
+                        self._apply_fold(
+                            lambda s: maintenance.fold_oldest(s, kk), full=False
+                        )
+                    else:  # fold-all or incoherent: a full rebuild either way
+                        self._apply_fold(self.table.compact, full=True)
+                if (self._folds, self._full_compacts) != ran_before:
+                    self.registry.publish(self._shadow)
+
+        t = threading.Thread(target=run, name="serve-table-fold", daemon=True)
+        self._fold_thread = t
+        t.start()
+        return t
+
+    @property
+    def fold_in_flight(self) -> bool:
+        t = self._fold_thread
+        return t is not None and t.is_alive()
+
+    # -- read path (never blocks on writes/folds) ------------------------------
+    def current(self) -> Snapshot:
+        """The snapshot reads execute against right now."""
+        return self.registry.current()
+
+    def query_many(self, requests) -> tuple[list, int]:
+        """Merged multiplicities per request against the current snapshot.
+
+        Returns ``(results, seqno)`` — one int32 array per request plus
+        the seqno of the snapshot that served them (every key of every
+        request in the batch observes that one consistent version).
+        """
+        snap = self.registry.current()
+        out = self.batcher.query_many(snap.state, requests)
+        with self._read_lock:
+            self._reads += len(requests)
+            self._read_batches += 1
+        return out, snap.seqno
+
+    def retrieve_many(self, requests, *, per_layer_counts: bool = False):
+        """Stored values per request key against the current snapshot.
+
+        Returns ``(results, seqno)``; see
+        :meth:`MicroBatcher.retrieve_many` for the result shape.
+        """
+        snap = self.registry.current()
+        out = self.batcher.retrieve_many(
+            snap.state, requests, per_layer_counts=per_layer_counts
+        )
+        with self._read_lock:
+            self._reads += len(requests)
+            self._read_batches += 1
+        return out, snap.seqno
+
+    def query(self, keys) -> np.ndarray:
+        """Single-request convenience wrapper over :meth:`query_many`."""
+        return self.query_many([keys])[0][0]
+
+    # -- embedded writer loop ---------------------------------------------------
+    def start(self, poll_interval: float = 0.001) -> None:
+        """Run the writer loop on a daemon thread until :meth:`stop`.
+
+        A write that fails to apply stops the loop (the failed batch stays
+        at the head of the queue) and surfaces as ``stats().last_error`` —
+        never a silently dead thread.
+        """
+        if self._writer_thread is not None and self._writer_thread.is_alive():
+            raise RuntimeError("writer loop already running")
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                try:
+                    applied = self.step()
+                except Exception:
+                    self._stop.set()  # error is in stats().last_error
+                    return
+                if not applied:
+                    time.sleep(poll_interval)
+
+        self._writer_thread = threading.Thread(
+            target=loop, name="serve-table-writer", daemon=True
+        )
+        self._writer_thread.start()
+
+    def stop(self) -> None:
+        """Stop the writer loop (queued writes stay queued)."""
+        self._stop.set()
+        if self._writer_thread is not None:
+            self._writer_thread.join()
+            self._writer_thread = None
+
+    def drain(self, timeout: float = 60.0) -> None:
+        """Block until every queued write has been applied and published.
+
+        Works with the embedded writer loop (waits) or without one (drives
+        :meth:`step` inline); in-flight background folds are joined.
+        """
+        deadline = time.monotonic() + timeout
+        while self.pending() or self.fold_in_flight:
+            if time.monotonic() > deadline:
+                raise TimeoutError("drain timed out")
+            if self.fold_in_flight:
+                self._fold_thread.join(timeout=max(0.0, deadline - time.monotonic()))
+                continue
+            writer_alive = (
+                self._writer_thread is not None and self._writer_thread.is_alive()
+            )
+            if writer_alive:
+                time.sleep(0.0005)
+            else:
+                self.step()
+
+    # -- metrics ----------------------------------------------------------------
+    def stats(self) -> ServerStats:
+        """A coherent host-side sample of every serving counter."""
+        return ServerStats(
+            seqno=self.registry.seqno,
+            pending_writes=self.pending(),
+            writes_applied=self._writes_applied,
+            reads=self._reads,
+            read_batches=self._read_batches,
+            folds=self._folds,
+            full_compacts=self._full_compacts,
+            fold_seconds_total=self._fold_seconds,
+            last_fold_seconds=self._last_fold_seconds,
+            fold_in_flight=self.fold_in_flight,
+            skew_fallbacks=self.table.skew_fallbacks - self._skew_base,
+            last_error=self._last_error,
+            batcher=self.batcher.stats(),
+            shadow=self._shadow.stats(),
+        )

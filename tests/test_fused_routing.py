@@ -257,6 +257,62 @@ def test_fused_plan_caps_are_exact(mesh8):
     assert res.values.shape[0] // 8 == max(8, -(-out // 8) * 8)
 
 
+def test_per_layer_counts_parity_and_collective_budget(mesh8):
+    """retrieve(per_layer_counts=True): fused == legacy breakdown, row sums
+    equal the merged counts, and the fused path STILL costs exactly 2
+    all-to-alls — the breakdown rides the bitcast return buffer, not a
+    second round (the ROADMAP "fused return payload packing" item)."""
+    rng = np.random.default_rng(41)
+    q = jnp.asarray(rng.integers(0, 1 << 14, 128, dtype=np.uint32))
+    fused_t = DistributedHashTable(mesh8, ("d",), hash_range=1 << 12)
+    legacy_t = DistributedHashTable(
+        mesh8, ("d",), hash_range=1 << 12, fused_routing=False
+    )
+    state_f = _four_layer_state(fused_t, np.random.default_rng(41))
+    state_l = _four_layer_state(legacy_t, np.random.default_rng(41))
+
+    res_f = fused_t.retrieve(
+        state_f, q, out_capacity=4096, seg_capacity=4096, per_layer_counts=True
+    )
+    res_l = legacy_t.retrieve(
+        state_l, q, out_capacity=4096, seg_capacity=4096, per_layer_counts=True
+    )
+    assert res_f.layer_counts.shape == (128, 4)
+    np.testing.assert_array_equal(
+        np.asarray(res_f.layer_counts), np.asarray(res_l.layer_counts)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res_f.layer_counts).sum(axis=1), np.asarray(res_f.counts)
+    )
+    # tombstoned rows contribute zero to their layer's column
+    deleted = np.asarray(
+        fused_t.query(state_f, q)
+    )  # merged counts already exclude them
+    np.testing.assert_array_equal(np.asarray(res_f.counts), deleted)
+
+    # the provenance is layer-exact: a key inserted only in delta 2 shows
+    # its count in column 2 and nowhere else
+    fresh = jnp.asarray(rng.integers(1 << 15, 1 << 16, 16, dtype=np.uint32))
+    s2 = fused_t.init(jnp.asarray(rng.integers(0, 1 << 14, 512, dtype=np.uint32)))
+    s2 = s2.insert(jnp.asarray(rng.integers(0, 1 << 14, 64, dtype=np.uint32)))
+    s2 = s2.insert(fresh)
+    r2 = fused_t.retrieve(
+        s2, jnp.concatenate([fresh, fresh]), out_capacity=512,
+        seg_capacity=512, per_layer_counts=True,
+    )
+    lc = np.asarray(r2.layer_counts)
+    assert (lc[:, 2] >= 1).all() and (lc[:, :2].sum() == 0)
+
+    # collective budget unchanged: 2 (dispatch + fused ragged return)
+    jx = jax.make_jaxpr(
+        lambda s, qq: plans.exec_retrieve(
+            fused_t, s, qq, out_capacity=2048, seg_capacity=2048,
+            per_layer_counts=True,
+        )
+    )(state_f, q)
+    assert count_primitive(jx.jaxpr, "all_to_all") == 2
+
+
 def test_coherent_delta_geometry_is_small(mesh8):
     """Coherent deltas stride the base's bucket map: a small insert must not
     pay the base's O(hash_range / D) offsets array."""

@@ -1,0 +1,498 @@
+"""Serving engine — snapshot consistency, micro-batching, executor caching.
+
+The acceptance properties of the serving tentpole:
+
+* **Snapshot consistency**: any interleaved writer/reader schedule
+  observes, for each read, *exactly* the oracle contents of the seqno the
+  read reports — never a torn or partially-applied write (reads bind to
+  one published immutable state).
+* **Executor reuse**: micro-batched requests of shifting ragged sizes
+  land on pow2-bucketed static shapes, so the jitted plan executors are
+  reused across requests — asserted both on the batcher's own plan cache
+  counters and on ``jax.jit``'s compiled-cache size (no per-request
+  retrace).
+* **Background compaction off the read path**: a fold running on a worker
+  thread never blocks reads; reads issued during the fold serve the
+  pre-fold seqno and stay oracle-exact (the CI smoke in
+  ``benchmarks/bench_serve.py`` additionally gates on this under load).
+"""
+from collections import Counter
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plans
+from repro.core.schema import TableSchema
+from repro.core.table import DistributedHashTable
+from repro.serve_table import (
+    CompactionPolicy,
+    MicroBatcher,
+    SnapshotRegistry,
+    TableServer,
+)
+from test_table_state import Oracle, _keys_for, _value_rows, _values_for
+
+SCHEMAS = [
+    pytest.param(TableSchema("uint32", 1), id="u32x1"),
+    pytest.param(TableSchema("uint64", 2), id="u64x2"),
+]
+
+
+# ---------------------------------------------------------------------------
+# SnapshotRegistry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_publish_and_history(mesh8):
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 10)
+    rng = np.random.default_rng(0)
+    s0 = table.init(jnp.asarray(rng.integers(0, 1 << 14, 64, dtype=np.uint32)))
+    reg = SnapshotRegistry(s0, history=3)
+    assert reg.current().seqno == 0 and reg.current().state is s0
+    s1 = s0.insert(jnp.asarray(rng.integers(0, 1 << 14, 8, dtype=np.uint32)))
+    snap = reg.publish(s1)
+    assert snap.seqno == 1 and reg.current().state is s1
+    # a reader holding the old snapshot still sees the old state object
+    assert reg.recent(0) is not None and reg.recent(0).state is s0
+    for i in range(4):
+        reg.publish(s1)
+    assert reg.recent(0) is None  # aged out of the ring
+    assert reg.seqno == 5
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schema", SCHEMAS)
+def test_batcher_scatter_matches_oracle(mesh8, schema):
+    """Ragged request batches through one fused execution == per-key oracle."""
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 12, schema=schema)
+    rng = np.random.default_rng(1 + schema.value_cols)
+    keys = _keys_for(schema, rng, 512)
+    vals = _values_for(schema, 0, 512)
+    oracle = Oracle()
+    oracle.insert(keys, vals)
+    state = table.init(table.schema.pack_keys(keys), values=jnp.asarray(vals))
+
+    batcher = MicroBatcher(table, min_bucket=32)
+    requests = [
+        keys[:7],
+        keys[100:101],
+        _keys_for(schema, rng, 13),  # mostly misses
+        keys[200:245],
+    ]
+    counts = batcher.query_many(state, requests)
+    assert len(counts) == len(requests)
+    for req, got in zip(requests, counts):
+        want = np.array([oracle.count(k) for k in req], np.int32)
+        np.testing.assert_array_equal(got, want)
+
+    values = batcher.retrieve_many(state, requests)
+    for req, got in zip(requests, values):
+        assert len(got) == len(req)
+        for k, rows in zip(req, got):
+            assert sorted(_value_rows(np.asarray(rows)), key=repr) == oracle.values(k)
+
+    # per-layer provenance through the batcher
+    state2 = state.insert(
+        table.schema.pack_keys(keys[:8]), jnp.asarray(_values_for(schema, 9000, 8))
+    )
+    out = batcher.retrieve_many(state2, [keys[:8]], per_layer_counts=True)
+    (vals8, lc) = out[0]
+    assert lc.shape == (8, 2)
+    assert (lc.sum(axis=1) == np.array([len(vals8[i]) for i in range(8)])).all()
+    assert (lc[:, 1] == 1).all()  # the reinserted copy lives in delta 1
+
+
+def test_batcher_bucketing_reuses_executors(mesh8):
+    """Shifting request sizes within a bucket: zero new traces after warmup.
+
+    The acceptance criterion's executor-cache assertion: both the
+    batcher's plan cache and the underlying ``jax.jit`` compiled cache
+    stop growing once each pow2 bucket has been seen.
+    """
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 12)
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 1 << 14, 512, dtype=np.uint32)
+    state = table.init(jnp.asarray(keys))
+    batcher = MicroBatcher(table, min_bucket=64)
+
+    assert batcher.bucket_size(1) == 64
+    assert batcher.bucket_size(64) == 64
+    assert batcher.bucket_size(65) == 128
+    assert batcher.bucket_size(200) == 256
+
+    # warmup: one batch in the 64-bucket, one in the 128-bucket
+    batcher.query_many(state, [keys[:10], keys[20:40]])
+    batcher.query_many(state, [keys[:50], keys[60:125]])
+    batcher.retrieve_many(state, [keys[:10], keys[20:40]])
+    batcher.retrieve_many(state, [keys[:50], keys[60:125]])
+    warm = batcher.stats()
+    has_cache_size = hasattr(plans.exec_query, "_cache_size")
+    if has_cache_size:
+        q_cache = plans.exec_query._cache_size()
+        r_cache = plans.exec_retrieve._cache_size()
+
+    # steady traffic: shifting ragged sizes, same buckets
+    hits_before = warm.cache_hits
+    for i in range(6):
+        a, b = 5 + 3 * i, 30 + 2 * i
+        batcher.query_many(state, [keys[:a], keys[a : a + b]])
+        batcher.retrieve_many(state, [keys[:a], keys[a : a + b]])
+    stats = batcher.stats()
+    assert stats.cache_misses == warm.cache_misses  # no new plans
+    assert stats.cache_hits == hits_before + 12  # every batch hit
+    if has_cache_size:
+        # the jitted executors really were reused: zero new compiled entries
+        assert plans.exec_query._cache_size() == q_cache
+        assert plans.exec_retrieve._cache_size() == r_cache
+    assert stats.requests == warm.requests + 24
+    assert 0.0 < stats.pad_fraction < 1.0
+
+
+def test_batcher_overflow_doubles_and_recovers(mesh8):
+    """Data drift past a bucket's cached caps re-plans instead of dropping."""
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 11)
+    rng = np.random.default_rng(9)
+    base = rng.choice(np.arange(1 << 14, dtype=np.uint32), size=64, replace=False)
+    keys = np.concatenate([base, np.repeat(base[0], 64)])  # key 0: 65 copies
+    state = table.init(jnp.asarray(keys))
+    batcher = MicroBatcher(table, min_bucket=32)
+
+    # warm the 32-bucket with low-multiplicity traffic
+    out = batcher.retrieve_many(state, [base[1:9]])
+    assert all(len(v) == 1 for v in out[0])
+    # now a request hitting the hot key: outgrows the cached caps
+    out = batcher.retrieve_many(state, [np.array([base[0]], np.uint32)])
+    assert len(out[0][0]) == 65
+    assert batcher.stats().overflow_retries >= 1
+    cnt = Counter(keys.tolist())
+    got = batcher.query_many(state, [base[:16]])[0]
+    np.testing.assert_array_equal(got, [cnt[int(k)] for k in base[:16]])
+
+
+# ---------------------------------------------------------------------------
+# TableServer — snapshot consistency under interleaved schedules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schema", SCHEMAS)
+@pytest.mark.parametrize("meshname", ["mesh1", "mesh8"])
+def test_interleaved_writes_and_reads_observe_exact_seqno(
+    schema, meshname, request
+):
+    """Every read reports a seqno and matches that seqno's oracle exactly.
+
+    The writer applies queued batches in submit order (``window`` per
+    publish); an oracle is forked at every publish by replaying the
+    applied prefix of the op log.  Reads interleave at every stage —
+    including against stale pre-step snapshots — and must always agree
+    with the oracle AT THEIR REPORTED SEQNO (no torn reads, no early
+    visibility of queued writes).
+    """
+    mesh = request.getfixturevalue(meshname)
+    d = 8 if meshname == "mesh8" else 1
+    table = DistributedHashTable(
+        mesh, ("d",), hash_range=1 << 12, schema=schema, max_deltas=8
+    )
+    rng = np.random.default_rng(13 + d + schema.value_cols)
+    keys = _keys_for(schema, rng, 256)
+    vals = _values_for(schema, 0, 256)
+    server = TableServer(table, keys, vals, window=2)
+
+    ops = []  # full submit-order op log; ops[:applied] are visible
+    applied = 0
+
+    def oracle_at(n_applied):
+        o = Oracle()
+        o.insert(keys, vals)
+        for kind, kk, vv in ops[:n_applied]:
+            o.insert(kk, vv) if kind == "insert" else o.delete(kk)
+        return o
+
+    oracles = {0: oracle_at(0)}  # seqno -> oracle
+
+    def pump():
+        """Drive the writer; record an oracle fork at every publish."""
+        nonlocal applied
+        while True:
+            n = server.step()
+            if not n:
+                break
+            applied += n
+            oracles[server.current().seqno] = oracle_at(applied)
+
+    def read_and_check(reqs):
+        counts, seq = server.query_many(reqs)
+        oracle = oracles[seq]
+        for req, got in zip(reqs, counts):
+            want = np.array([oracle.count(k) for k in req], np.int32)
+            np.testing.assert_array_equal(got, want)
+
+    def submit_insert(n, start):
+        ins = _keys_for(schema, rng, n, lo=1 << 16, hi=1 << 17)
+        iv = _values_for(schema, start, n)
+        server.submit_insert(ins, iv)
+        ops.append(("insert", ins, iv))
+        return ins
+
+    def submit_delete(kk):
+        server.submit_delete(kk)
+        ops.append(("delete", kk, None))
+
+    # reads interleave with queued-but-unapplied writes
+    read_and_check([keys[:16], keys[100:120]])
+    ins1 = submit_insert(8 * d, 10_000)
+    read_and_check([ins1])  # still seqno 0: queued ≠ visible
+    submit_delete(keys[:8])
+    pump()  # window=2: one publish
+    assert server.current().seqno == 1
+    read_and_check([ins1, keys[:16], keys[:8]])
+
+    # second wave: reinsert deleted keys, delete delta keys — 3 ops over
+    # window 2 → two publishes, each with its own oracle fork
+    ins2 = submit_insert(8 * d, 20_000)
+    submit_delete(ins1[: 2 * d])
+    re = keys[:8]
+    rev = _values_for(schema, 30_000, 8)
+    server.submit_insert(re, rev)
+    ops.append(("insert", re, rev))
+    read_and_check([ins2])  # pre-step: none of the wave visible
+    pump()
+    assert server.current().seqno == 3
+    read_and_check([re, ins2, ins1, keys[:32]])
+    # and a stale-oracle sanity: seqno-2 fork differs from seqno-3
+    assert oracles[2].count(re[0]) + 1 == oracles[3].count(re[0])
+    assert server.stats().reads > 0
+
+
+def test_server_maintenance_folds_and_stays_consistent(mesh8):
+    """A steady write stream triggers policy folds; answers stay exact and
+    the delta ring never overflows."""
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 12, max_deltas=4)
+    rng = np.random.default_rng(17)
+    keys = rng.integers(0, 1 << 14, 512, dtype=np.uint32)
+    vals = np.arange(512, dtype=np.int32)
+    server = TableServer(
+        table, keys, vals, policy=CompactionPolicy(max_delta_depth=4, fold_k=2)
+    )
+    oracle = Oracle()
+    oracle.insert(keys, vals)
+
+    next_val = 1000
+    live = []
+    for wave in range(12):
+        ins = rng.integers(1 << 14, 1 << 15, 16, dtype=np.uint32)
+        iv = np.arange(next_val, next_val + 16, dtype=np.int32)
+        next_val += 16
+        server.submit_insert(ins, iv)
+        oracle.insert(ins, iv)
+        live.extend(ins.tolist())
+        if wave % 3 == 2:
+            dead = np.array(live[:8], np.uint32)
+            server.submit_delete(dead)
+            oracle.delete(dead)
+            live = live[8:]
+        server.drain()
+    stats = server.stats()
+    assert stats.folds + stats.full_compacts >= 1  # maintenance really ran
+    # the policy keeps the ring admissible: depth may sit AT the trigger
+    # after the last insert (the fold runs lazily before the next one) but
+    # the 12 waves above could only complete if no insert ever overflowed.
+    assert stats.shadow.delta_depth <= table.max_deltas
+
+    q = np.concatenate([keys[:32], np.array(live[:32], np.uint32)])
+    counts, seq = server.query_many([q])
+    want = np.array([oracle.count(k) for k in q], np.int32)
+    np.testing.assert_array_equal(counts[0], want)
+    (res,), _ = server.retrieve_many([q])
+    for k, rows in zip(q, res):
+        assert sorted(_value_rows(np.asarray(rows)), key=repr) == oracle.values(k)
+
+
+def test_reads_flow_during_background_fold(mesh8):
+    """Reads issued while a fold is in flight serve the pre-fold seqno,
+    return oracle-exact answers, and the publish lands afterwards."""
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 12, max_deltas=8)
+    rng = np.random.default_rng(19)
+    keys = rng.integers(0, 1 << 14, 512, dtype=np.uint32)
+    vals = np.arange(512, dtype=np.int32)
+    server = TableServer(table, keys, vals)
+    oracle = Oracle()
+    oracle.insert(keys, vals)
+    for _ in range(4):
+        ins = rng.integers(1 << 14, 1 << 15, 32, dtype=np.uint32)
+        iv = np.arange(64, 96, dtype=np.int32)
+        server.submit_insert(ins, iv)
+        oracle.insert(ins, iv)
+    server.drain()
+    pre = server.current().seqno
+
+    # warm the read executor for the current depth so the during-fold loop
+    # measures serving (the fold's own first-trace dominates its runtime,
+    # leaving a wide window for warm reads to land inside).
+    server.query_many([keys[:24]])
+    t = server.fold_async(k=2)
+    reads_during = 0
+    while t.is_alive():
+        counts, seq = server.query_many([keys[:24]])
+        assert seq == pre  # the old snapshot keeps serving
+        np.testing.assert_array_equal(
+            counts[0], [oracle.count(k) for k in keys[:24]]
+        )
+        reads_during += 1
+    t.join()
+    assert reads_during >= 1  # reads really interleaved with the fold
+    assert server.current().seqno == pre + 1
+    assert server.stats().folds == 1
+    # post-fold reads: same answers, new seqno
+    counts, seq = server.query_many([keys[:24]])
+    assert seq == pre + 1
+    np.testing.assert_array_equal(counts[0], [oracle.count(k) for k in keys[:24]])
+
+
+def test_writes_defer_during_fold_then_apply(mesh8):
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 12, max_deltas=8)
+    rng = np.random.default_rng(23)
+    keys = rng.integers(0, 1 << 14, 512, dtype=np.uint32)
+    server = TableServer(table, keys, np.arange(512, dtype=np.int32))
+    for _ in range(3):
+        server.submit_insert(
+            rng.integers(1 << 14, 1 << 15, 16, dtype=np.uint32),
+            np.arange(16, dtype=np.int32),
+        )
+    server.drain()
+    t = server.fold_async(k=1)
+    server.submit_insert(
+        rng.integers(1 << 14, 1 << 15, 16, dtype=np.uint32),
+        np.arange(16, dtype=np.int32),
+    )
+    stepped = server.step()
+    if t.is_alive():
+        assert stepped == 0  # deferred while folding
+    t.join()
+    server.drain()
+    assert server.pending() == 0
+
+
+def test_delete_runs_trigger_policy_before_tombstone_overflow(mesh8):
+    """A delete-heavy window must evaluate the policy per op: tombstone
+    pressure escalates to a full fold mid-run instead of overflowing the
+    buffer and silently losing deletes."""
+    table = DistributedHashTable(
+        mesh8, ("d",), hash_range=1 << 12, tombstone_capacity=16
+    )
+    rng = np.random.default_rng(31)
+    keys = rng.choice(np.arange(1 << 14, dtype=np.uint32), size=512, replace=False)
+    server = TableServer(
+        table,
+        keys,
+        np.arange(512, dtype=np.int32),
+        policy=CompactionPolicy(max_delta_depth=8, tombstone_load=0.5),
+        window=16,
+    )
+    # 8 delete batches of 8 keys = 64 deletes through a 16-slot buffer: only
+    # per-op policy folds keep it admissible.
+    dead = keys[:64]
+    for i in range(8):
+        server.submit_delete(dead[i * 8 : (i + 1) * 8])
+    server.drain()
+    stats = server.stats()
+    assert stats.shadow.tombstone_dropped == 0  # nothing lost
+    assert stats.full_compacts >= 1  # the escalation really fired
+    counts, _ = server.query_many([dead, keys[64:96]])
+    np.testing.assert_array_equal(counts[0], np.zeros(64, np.int32))
+    assert (counts[1] == 1).all()
+
+
+def test_fold_async_escalates_tombstone_pressure_at_depth_zero(mesh8):
+    """A policy-driven background fold must run the full compact when the
+    tombstone buffer saturates with NO deltas to fold (the depth-0 case an
+    oldest-k fold cannot address)."""
+    table = DistributedHashTable(
+        mesh8, ("d",), hash_range=1 << 11, tombstone_capacity=16
+    )
+    rng = np.random.default_rng(37)
+    keys = rng.choice(np.arange(1 << 14, dtype=np.uint32), size=256, replace=False)
+    server = TableServer(
+        table,
+        keys,
+        np.arange(256, dtype=np.int32),
+        policy=CompactionPolicy(max_delta_depth=8, tombstone_load=0.5),
+    )
+    # saturate the buffer directly on the shadow (bypassing step's per-op
+    # policy) to model pressure at delta depth 0
+    server._shadow = server._shadow.delete(jnp.asarray(keys[:12]))
+    server.registry.publish(server._shadow)
+    pre = server.current().seqno
+    t = server.fold_async()  # policy-driven
+    t.join()
+    stats = server.stats()
+    assert stats.full_compacts == 1 and stats.folds == 0
+    assert stats.shadow.tombstone_count == 0  # buffer freed
+    assert server.current().seqno == pre + 1  # published
+    counts, _ = server.query_many([keys[:24]])
+    np.testing.assert_array_equal(
+        counts[0], [0] * 12 + [1] * 12
+    )
+
+
+def test_failed_write_is_requeued_and_surfaced(mesh8):
+    """An exception while applying a write must not lose the batch or die
+    silently: the op returns to the queue head and stats().last_error is
+    set (the embedded loop stops on it; inline drivers see the raise)."""
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 10, max_deltas=1)
+    rng = np.random.default_rng(41)
+    keys = rng.integers(0, 1 << 14, 256, dtype=np.uint32)
+    # a policy that never folds: the second insert hits the ring-full error
+    never = CompactionPolicy(
+        max_delta_depth=None, tombstone_load=2.0, tombstone_overflow=False
+    )
+    server = TableServer(table, keys, np.arange(256, dtype=np.int32), policy=never)
+    for _ in range(2):
+        server.submit_insert(
+            rng.integers(0, 1 << 14, 8, dtype=np.uint32),
+            np.arange(8, dtype=np.int32),
+        )
+    with pytest.raises(RuntimeError, match="delta ring full"):
+        server.step()
+    assert server.pending() == 1  # the failed batch is back at the head
+    stats = server.stats()
+    assert stats.last_error and "delta ring full" in stats.last_error
+    assert stats.writes_applied == 1  # the first insert did land + publish
+    assert server.current().seqno == 1
+
+
+def test_batcher_raises_instead_of_truncating(mesh8):
+    """Exhausted capacity retries fail loudly — never a silently short list."""
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 11)
+    rng = np.random.default_rng(33)
+    base = rng.choice(np.arange(1 << 14, dtype=np.uint32), size=64, replace=False)
+    keys = np.concatenate([base, np.repeat(base[0], 192)])  # hot key ×193
+    state = table.init(jnp.asarray(keys))
+    batcher = MicroBatcher(table, min_bucket=32, max_retries=1)
+    batcher.retrieve_many(state, [base[1:9]])  # warm tiny caps
+    with pytest.raises(RuntimeError, match="capacity doublings"):
+        batcher.retrieve_many(state, [np.array([base[0]], np.uint32)])
+
+
+def test_server_skew_fallback_surfaces_in_stats(mesh8):
+    """The satellite's visibility requirement: a skew-guard fallback on the
+    write path shows up in server stats."""
+    from test_maintenance import _narrow_batch
+
+    table = DistributedHashTable(mesh8, ("d",), hash_range=1 << 12)
+    rng = np.random.default_rng(29)
+    keys = rng.integers(0, 1 << 14, 512, dtype=np.uint32)
+    server = TableServer(table, keys, np.arange(512, dtype=np.int32))
+    narrow = _narrow_batch(table, server.current().state, 512)
+    server.submit_insert(narrow, np.arange(512, dtype=np.int32))
+    server.drain()
+    st = server.stats()
+    assert st.skew_fallbacks == 1
+    assert st.shadow.num_dropped == 0
+    counts, _ = server.query_many([narrow[:32]])
+    assert (counts[0] >= 1).all()
