@@ -38,6 +38,9 @@ BENCHES = [
     # serving engine: request-stream latency/throughput vs batching window,
     # fold-vs-full-compact pause time
     ("benchmarks.bench_serve", ["--keys", "32768"], 8),
+    # async front end: open-loop Poisson arrivals through the AOT-warmed
+    # server — p50/p99/p999 + goodput per offered rate
+    ("benchmarks.bench_serve", ["--keys", "32768", "--open-loop"], 8),
     # §5 SOTA comparison
     ("benchmarks.bench_sota_table", ["--keys", "262144"], 8),
     # framework extra: LM step cost

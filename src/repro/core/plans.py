@@ -303,6 +303,56 @@ def exec_live_count(table, state: TableState) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# AOT executor handles — lowered/compiled executables a serving front end can
+# call with zero live tracing.
+# ---------------------------------------------------------------------------
+
+
+def state_signature(state: TableState) -> tuple:
+    """Structural identity of a state for executor-handle keying.
+
+    Two states with equal signatures (same pytree structure — delta depth,
+    coherence, static graph metadata — and identical leaf shapes/dtypes)
+    execute through the same compiled program; the signature is exactly the
+    dynamic part of ``jax.jit``'s cache key, so an AOT executable compiled
+    against one is callable with the other.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    return (treedef, tuple((tuple(x.shape), jnp.result_type(x).name) for x in leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPlan:
+    """An AOT-compiled ``(state, queries) -> result`` executable.
+
+    Built by :meth:`QueryPlan.compile` / :meth:`RetrievePlan.compile` —
+    the ``jit(...).lower(...).compile()`` idiom: the trace/compile cost is
+    paid at *construction*, and calls run the XLA executable directly (the
+    jit dispatch cache is never consulted, so a warmed serving path does
+    zero live tracing by construction).  Calls require the exact structure
+    the plan was lowered for: a state matching :func:`state_signature` and
+    a query batch of ``num_queries`` packed keys.
+    """
+
+    compiled: object  # jax.stages.Compiled
+    kind: str  # "query" | "retrieve"
+    num_queries: int
+    signature: tuple  # state_signature the executable was lowered against
+
+    def __call__(self, state, queries):
+        return self.compiled(state, queries)
+
+
+def _proto_queries(table, num_queries: int) -> jax.Array:
+    """An all-sentinel query batch with the schema's packed shape."""
+    from repro.core.hashgraph import EMPTY_KEY
+
+    lanes = table.schema.key_lanes
+    shape = (num_queries,) if lanes == 1 else (num_queries, lanes)
+    return jnp.full(shape, EMPTY_KEY, jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
 # Plans — small frozen descriptors binding a table to resolved statics.
 # ---------------------------------------------------------------------------
 
@@ -316,6 +366,13 @@ class _PlanBase:
                 f"plan was built for {self.num_queries} queries, got {q.shape[0]}"
             )
         return st, q
+
+    def _proto_q(self, queries):
+        if queries is not None:
+            return self.table.schema.pack_keys(queries)
+        if self.num_queries is None:
+            raise ValueError("plan has no num_queries; pass a queries sample")
+        return _proto_queries(self.table, self.num_queries)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -333,6 +390,29 @@ class QueryPlan(_PlanBase):
         """Global join cardinality under the same plan (replicated ())."""
         st, q = self._prep(state, queries)
         return exec_join_size(self.table, st, q)
+
+    def lower(self, state, queries=None):
+        """AOT-lower the query executor against ``state``'s structure.
+
+        ``queries`` defaults to an all-sentinel batch of ``num_queries``
+        keys.  Returns a ``jax.stages.Lowered``; ``.compile()`` it (or use
+        :meth:`compile`) to get the executable — tracing happens here, not
+        on the first live request.
+        """
+        st = as_state(self.table, state)
+        return exec_query.lower(self.table, st, self._proto_q(queries))
+
+    def compile(self, state, queries=None) -> CompiledPlan:
+        """AOT-compile: a :class:`CompiledPlan` callable with zero live
+        tracing for any state matching ``state_signature(state)``."""
+        st = as_state(self.table, state)
+        q = self._proto_q(queries)
+        return CompiledPlan(
+            compiled=exec_query.lower(self.table, st, q).compile(),
+            kind="query",
+            num_queries=q.shape[0],
+            signature=state_signature(st),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -354,6 +434,30 @@ class RetrievePlan(_PlanBase):
             out_capacity=self.out_capacity,
             seg_capacity=self.seg_capacity,
             per_layer_counts=self.per_layer_counts,
+        )
+
+    def lower(self, state, queries=None):
+        """AOT-lower the retrieve executor (capacities baked in) against
+        ``state``'s structure; see :meth:`QueryPlan.lower`."""
+        st = as_state(self.table, state)
+        return exec_retrieve.lower(
+            self.table,
+            st,
+            self._proto_q(queries),
+            out_capacity=self.out_capacity,
+            seg_capacity=self.seg_capacity,
+            per_layer_counts=self.per_layer_counts,
+        )
+
+    def compile(self, state, queries=None) -> CompiledPlan:
+        """AOT-compile: see :meth:`QueryPlan.compile`."""
+        st = as_state(self.table, state)
+        q = self._proto_q(queries)
+        return CompiledPlan(
+            compiled=self.lower(st, q).compile(),
+            kind="retrieve",
+            num_queries=q.shape[0],
+            signature=state_signature(st),
         )
 
 

@@ -1,7 +1,7 @@
 """Table serving engine — snapshot-swapped reads, micro-batched requests,
-incremental background compaction.
+incremental background compaction, and an async AOT-warmed front end.
 
-Quickstart::
+Quickstart (synchronous)::
 
     from repro.serve_table import TableServer
 
@@ -11,23 +11,50 @@ Quickstart::
     counts, seqno = server.query_many([q1, q2, q3]) # one fused execution
     server.fold_async()                             # compaction off the read path
 
+Quickstart (async, zero live compiles)::
+
+    from repro.serve_table import AsyncFrontend, TableServer
+
+    server = TableServer(table, keys, values, write_bucket=256)
+    server.warm(buckets=(64, 128, 256))             # AOT: compile the grid
+    with AsyncFrontend(server, linger=0.002) as fe:
+        fut = fe.submit_query(q)                    # -> Future[QueryResult]
+        fe.submit_insert(new_keys)                  # bounded backlog
+        print(fut.result().counts)
+
 See :mod:`repro.serve_table.server` for the serving design,
-:mod:`repro.serve_table.batcher` for the static-shape admission layer, and
+:mod:`repro.serve_table.batcher` for the static-shape admission layer,
+:mod:`repro.serve_table.frontend` for deadline batching + futures,
+:mod:`repro.serve_table.aot` for the executor-grid warmup, and
 :mod:`repro.core.maintenance` for the fold/policy primitives underneath.
 """
 from repro.core.maintenance import CompactionPolicy, TableStats, fold_oldest
-from repro.serve_table.batcher import BatcherStats, MicroBatcher
+from repro.serve_table.aot import ExecutorGrid, WarmupStats, warm_server
+from repro.serve_table.batcher import BatcherStats, MicroBatcher, PendingBatch
+from repro.serve_table.frontend import (
+    AsyncFrontend,
+    DeadlineBatcher,
+    FrontendStats,
+    QueryResult,
+)
 from repro.serve_table.server import ServerStats, TableServer
 from repro.serve_table.snapshot import Snapshot, SnapshotRegistry
 
 __all__ = [
+    "AsyncFrontend",
     "BatcherStats",
     "CompactionPolicy",
+    "DeadlineBatcher",
+    "ExecutorGrid",
+    "FrontendStats",
     "MicroBatcher",
+    "PendingBatch",
+    "QueryResult",
     "ServerStats",
     "Snapshot",
     "SnapshotRegistry",
     "TableServer",
     "TableStats",
-    "fold_oldest",
+    "WarmupStats",
+    "warm_server",
 ]

@@ -58,6 +58,27 @@ class BatcherStats:
         return self.keys_padded / total if total else 0.0
 
 
+@dataclasses.dataclass
+class PendingBatch:
+    """One dispatched (not yet gathered) fused query execution.
+
+    ``counts`` is the device array jax has already enqueued; nothing has
+    blocked on it yet.  :meth:`scatter` performs the host transfer (blocks
+    until the device finishes) and slices results back per request — the
+    front end runs it on a separate thread so the device crunches batch
+    ``n+1`` while the host scatters batch ``n``.
+    """
+
+    counts: object  # enqueued device array
+    bounds: list  # (start, stop) per request in the flat batch
+    seqno: int  # snapshot the batch executed against
+    aot: bool  # served by an AOT-warmed executable (no jit dispatch)
+
+    def scatter(self) -> list:
+        c = np.asarray(self.counts)
+        return [c[a:b] for a, b in self.bounds]
+
+
 class MicroBatcher:
     """Coalesce ragged read requests into plan-cache-hitting static batches.
 
@@ -82,6 +103,10 @@ class MicroBatcher:
         self.table = table
         self.min_bucket = max(int(min_bucket), table.num_devices)
         self.max_retries = int(max_retries)
+        # AOT executor grid (repro.serve_table.aot.ExecutorGrid), attached
+        # by warm_server(): consulted before the jit plan caches so warmed
+        # traffic never touches jax's dispatch machinery.
+        self.executors = None
         self._batch_lock = threading.Lock()
         self._qplans = {}  # bucket -> QueryPlan
         self._rplans = {}  # (bucket, out_cap, seg_cap, per_layer) -> RetrievePlan
@@ -125,28 +150,55 @@ class MicroBatcher:
         return jnp.asarray(flat), bounds
 
     # -- read paths ----------------------------------------------------------
-    def query_many(self, state, requests: Sequence) -> list:
-        """Merged multiplicities for each request, one fused execution.
+    def dispatch_query(self, state, requests: Sequence, seqno: int = -1) -> PendingBatch:
+        """Enqueue one fused query execution; return before results land.
 
-        Returns one ``np.int32`` array per request, aligned with its keys.
+        The returned :class:`PendingBatch` carries the enqueued device
+        array — call :meth:`PendingBatch.scatter` (outside the batch lock,
+        on any thread) to block on the device and slice results back per
+        request.  Splitting dispatch from scatter is what lets the async
+        front end overlap host-side scatter of batch ``n`` with the device
+        execution of batch ``n+1``.
+
+        An attached AOT :attr:`executors` grid is consulted first: a hit
+        calls the pre-compiled XLA executable directly (jit's dispatch
+        cache is never touched — AOT executables don't live there); a miss
+        falls back to the cached jit plans and is counted on the grid.
         """
-        if not requests:
-            return []
         with self._batch_lock:
             st = as_state(self.table, state)
             q, bounds = self._coalesce(requests)
             bucket = q.shape[0]
-            plan = self._qplans.get(bucket)
-            if plan is None:
-                plan = self.table.plan_query(num_queries=bucket)
-                self._qplans[bucket] = plan
-                self._misses += 1
-            else:
+            grid = self.executors
+            handle = grid.query_handle(st, bucket) if grid is not None else None
+            if handle is not None:
                 self._hits += 1
-            counts = np.asarray(plan(st, q))
+                counts = handle(st, q)
+            else:
+                plan = self._qplans.get(bucket)
+                if plan is None:
+                    plan = self.table.plan_query(num_queries=bucket)
+                    self._qplans[bucket] = plan
+                    self._misses += 1
+                else:
+                    self._hits += 1
+                counts = plan(st, q)
             self._requests += len(requests)
             self._batches += 1
-            return [counts[a:b] for a, b in bounds]
+            return PendingBatch(
+                counts=counts, bounds=bounds, seqno=seqno, aot=handle is not None
+            )
+
+    def query_many(self, state, requests: Sequence) -> list:
+        """Merged multiplicities for each request, one fused execution.
+
+        Returns one ``np.int32`` array per request, aligned with its keys.
+        (Synchronous wrapper: dispatch + scatter back to back; the host
+        transfer happens outside the batch lock.)
+        """
+        if not requests:
+            return []
+        return self.dispatch_query(state, requests).scatter()
 
     def retrieve_many(
         self, state, requests: Sequence, *, per_layer_counts: bool = False
@@ -209,6 +261,11 @@ class MicroBatcher:
             return [(vals, lc[a:b]) for vals, (a, b) in zip(out, bounds)]
 
     def _exec_retrieve(self, st, q, bucket, caps, per_layer):
+        grid = self.executors
+        if grid is not None:
+            handle = grid.retrieve_handle(st, bucket, caps[0], caps[1], per_layer)
+            if handle is not None:
+                return handle(st, q), True
         key = (bucket, caps[0], caps[1], per_layer)
         plan = self._rplans.get(key)
         hit = plan is not None

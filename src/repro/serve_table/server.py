@@ -47,6 +47,7 @@ import numpy as np
 from repro.core import maintenance
 from repro.core.hashgraph import EMPTY_KEY
 from repro.core.maintenance import CompactionPolicy, TableStats
+from repro.core.state import empty_tombstones
 from repro.serve_table.batcher import BatcherStats, MicroBatcher
 from repro.serve_table.snapshot import Snapshot, SnapshotRegistry
 
@@ -69,6 +70,7 @@ class ServerStats:
     last_error: Optional[str]  # last write-application failure (None = healthy)
     batcher: BatcherStats
     shadow: TableStats  # maintenance signals of the writer's state
+    warmup: Optional[object] = None  # WarmupStats once warm() ran, else None
 
 
 class TableServer:
@@ -93,9 +95,31 @@ class TableServer:
         policy: Optional[CompactionPolicy] = None,
         batcher: Optional[MicroBatcher] = None,
         window: int = 8,
+        write_bucket: Optional[int] = None,
     ):
         self.table = table
+        self.write_bucket: Optional[int] = None
+        if write_bucket is not None:
+            wb = int(write_bucket)
+            if wb < 1 or wb & (wb - 1):
+                raise ValueError("write_bucket must be a power of two")
+            if wb % table.num_devices:
+                raise ValueError(
+                    "write_bucket must be a multiple of the device count"
+                )
+            self.write_bucket = wb
         state = table.init(*self._pad_insert(keys, values))
+        if self.write_bucket is not None:
+            # Shape-stable serving pre-grows the tombstone buffer (init
+            # leaves it at zero capacity until the first delete): one
+            # tombstone structure for the state's whole life means one AOT
+            # executor per (bucket, depth) instead of two.
+            state = dataclasses.replace(
+                state,
+                tombstones=empty_tombstones(
+                    table.tombstone_capacity, table.schema.key_lanes
+                ),
+            )
         self.registry = SnapshotRegistry(state)
         self.policy = policy or CompactionPolicy(
             max_delta_depth=table.max_deltas
@@ -117,6 +141,7 @@ class TableServer:
         self._stop = threading.Event()
         self._writes_applied = 0
         self._last_error: Optional[str] = None
+        self._fold_error: Optional[str] = None
         self._reads = 0
         self._read_batches = 0
         self._folds = 0
@@ -126,12 +151,14 @@ class TableServer:
         self._skew_base = table.skew_fallbacks
 
     # -- write path (admission) ----------------------------------------------
-    def _pad_insert(self, keys, values):
+    def _pad_insert(self, keys, values, bucket: Optional[int] = None):
         """Device-align one mutation batch: EMPTY-pad keys, -1-pad values.
 
         The build/insert contract wants ``N % devices == 0``; sentinel rows
         route round-robin, land in trash buckets, and are invisible to
-        every read — the same padding idiom as the exchange.
+        every read — the same padding idiom as the exchange.  With
+        ``bucket`` the batch is padded all the way to that fixed size, so
+        every delta it builds shares one geometry (the AOT grid contract).
         """
         schema = self.table.schema
         keys = schema.pack_keys(keys)
@@ -143,7 +170,7 @@ class TableServer:
                     [values] * schema.value_cols, axis=1
                 )
         values = schema.pack_values(values)
-        pad = (-n) % self.table.num_devices
+        pad = (-n) % self.table.num_devices if bucket is None else bucket - n
         if pad:
             kshape = (pad,) + tuple(keys.shape[1:])
             vshape = (pad,) + tuple(values.shape[1:])
@@ -156,10 +183,33 @@ class TableServer:
         return keys, values
 
     def submit_insert(self, keys, values=None) -> None:
-        """Queue one insert batch (applied by the writer loop)."""
-        keys, values = self._pad_insert(keys, values)
+        """Queue one insert batch (applied by the writer loop).
+
+        With ``write_bucket`` set, the batch is chunked to the bucket size
+        and each chunk EMPTY-padded up to it: every queued insert then
+        builds a delta of identical geometry, which is what lets
+        :meth:`warm` enumerate (and AOT-compile) every state structure the
+        writer can reach.
+        """
+        schema = self.table.schema
+        keys = schema.pack_keys(keys)
+        n = keys.shape[0]
+        if values is None:
+            values = np.arange(n, dtype=np.int32)
+            if schema.value_cols > 1:
+                values = np.stack([values] * schema.value_cols, axis=1)
+        values = schema.pack_values(values)
+        wb = self.write_bucket
+        if wb is None:
+            ops = [self._pad_insert(keys, values)]
+        else:
+            ops = [
+                self._pad_insert(keys[i : i + wb], values[i : i + wb], bucket=wb)
+                for i in range(0, max(1, n), wb)
+            ]
         with self._lock:
-            self._writes.append(("insert", keys, values))
+            for k, v in ops:
+                self._writes.append(("insert", k, v))
 
     def submit_delete(self, keys) -> None:
         """Queue one delete batch (applied by the writer loop).
@@ -284,6 +334,16 @@ class TableServer:
         """Run one timed fold of the shadow and attribute the counter."""
         t0 = time.perf_counter()
         self._shadow = fold_fn(self._shadow)
+        if full and self.write_bucket is not None:
+            # compact() resets the tombstone buffer to zero capacity;
+            # shape-stable serving re-grows it immediately so the state
+            # structure (and with it the AOT executor keys) stays fixed.
+            self._shadow = dataclasses.replace(
+                self._shadow,
+                tombstones=empty_tombstones(
+                    self.table.tombstone_capacity, self.table.schema.key_lanes
+                ),
+            )
         if full:
             self._full_compacts += 1
         else:
@@ -306,24 +366,33 @@ class TableServer:
             raise RuntimeError("a background fold is already in flight")
 
         def run():
-            with self._writer_mutex:
-                ran_before = (self._folds, self._full_compacts)
-                if k is None:
-                    # Policy-driven: same decision tree as inline maintenance
-                    # (including the depth-0 tombstone-pressure escalation).
-                    self._fold_shadow()
-                else:
-                    kk = min(k, len(self._shadow.deltas))
-                    if kk <= 0:
-                        return
-                    if self._shadow.coherent and kk < len(self._shadow.deltas):
-                        self._apply_fold(
-                            lambda s: maintenance.fold_oldest(s, kk), full=False
-                        )
-                    else:  # fold-all or incoherent: a full rebuild either way
-                        self._apply_fold(self.table.compact, full=True)
-                if (self._folds, self._full_compacts) != ran_before:
-                    self.registry.publish(self._shadow)
+            try:
+                with self._writer_mutex:
+                    ran_before = (self._folds, self._full_compacts)
+                    if k is None:
+                        # Policy-driven: same decision tree as inline
+                        # maintenance (including the depth-0
+                        # tombstone-pressure escalation).
+                        self._fold_shadow()
+                    else:
+                        kk = min(k, len(self._shadow.deltas))
+                        if kk <= 0:
+                            return
+                        if self._shadow.coherent and kk < len(self._shadow.deltas):
+                            self._apply_fold(
+                                lambda s: maintenance.fold_oldest(s, kk), full=False
+                            )
+                        else:  # fold-all or incoherent: full rebuild either way
+                            self._apply_fold(self.table.compact, full=True)
+                    if (self._folds, self._full_compacts) != ran_before:
+                        self.registry.publish(self._shadow)
+            except Exception as e:
+                # A dead fold thread must never be silent: the failure is
+                # surfaced on stats().last_error and re-raised by drain().
+                # The published snapshot stays at the last good seqno and
+                # the read path keeps serving it.
+                self._fold_error = f"{type(e).__name__}: {e}"
+                self._last_error = self._fold_error
 
         t = threading.Thread(target=run, name="serve-table-fold", daemon=True)
         self._fold_thread = t
@@ -373,6 +442,20 @@ class TableServer:
         """Single-request convenience wrapper over :meth:`query_many`."""
         return self.query_many([keys])[0][0]
 
+    # -- AOT warmup ---------------------------------------------------------------
+    def warm(self, **kwargs):
+        """AOT-compile the read-executor grid before admitting traffic.
+
+        Thin wrapper over :func:`repro.serve_table.aot.warm_server` (see it
+        for the knobs); requires ``write_bucket``.  After this, live reads
+        whose (bucket, state structure) fall inside the warmed grid run
+        pre-compiled XLA executables — zero tracing, zero compilation —
+        and coverage is visible in ``stats().warmup``.
+        """
+        from repro.serve_table.aot import warm_server
+
+        return warm_server(self, **kwargs)
+
     # -- embedded writer loop ---------------------------------------------------
     def start(self, poll_interval: float = 0.001) -> None:
         """Run the writer loop on a daemon thread until :meth:`stop`.
@@ -412,21 +495,77 @@ class TableServer:
 
         Works with the embedded writer loop (waits) or without one (drives
         :meth:`step` inline); in-flight background folds are joined.
+
+        Never exits silently with work still queued:
+
+        * raises :class:`TimeoutError` (with the number of still-pending
+          batches) if the queue has not emptied by ``timeout``;
+        * raises :class:`RuntimeError` promptly — not at timeout — if the
+          embedded writer it is waiting on stops (explicit :meth:`stop`,
+          or a write failure killing the loop) or a background fold
+          crashed, carrying ``last_error`` when one is recorded.
         """
         deadline = time.monotonic() + timeout
-        while self.pending() or self.fold_in_flight:
+        embedded = (
+            self._writer_thread is not None and self._writer_thread.is_alive()
+        )
+        while True:
+            if self._fold_error is not None:
+                raise RuntimeError(
+                    f"background fold failed: {self._fold_error}"
+                )
+            pending = self.pending()
+            if not pending and not self.fold_in_flight and self._settled():
+                return
             if time.monotonic() > deadline:
-                raise TimeoutError("drain timed out")
+                raise TimeoutError(
+                    f"drain timed out with {pending} pending "
+                    f"batch{'es' if pending != 1 else ''}"
+                    + (" and a fold in flight" if self.fold_in_flight else "")
+                )
             if self.fold_in_flight:
-                self._fold_thread.join(timeout=max(0.0, deadline - time.monotonic()))
+                t = self._fold_thread
+                if t is not None:
+                    t.join(
+                        timeout=min(0.05, max(0.0, deadline - time.monotonic()))
+                    )
                 continue
             writer_alive = (
                 self._writer_thread is not None and self._writer_thread.is_alive()
             )
+            if embedded and (self._stop.is_set() or not writer_alive):
+                # The writer this drain was parked on is gone: stop() was
+                # called, or a failing write batch killed the loop.  Waiters
+                # unblock immediately instead of spinning to the timeout.
+                why = (
+                    f"writer failed: {self._last_error}"
+                    if self._last_error
+                    else "server stopped"
+                )
+                raise RuntimeError(
+                    f"drain unblocked ({why}) with {pending} pending "
+                    f"batch{'es' if pending != 1 else ''}"
+                )
             if writer_alive:
                 time.sleep(0.0005)
             else:
                 self.step()
+
+    def _settled(self) -> bool:
+        """True once applied work is *published*, not merely dequeued.
+
+        ``pending()`` drops to 0 the moment the writer pops the last op —
+        before the mutation lands and the snapshot swaps.  Briefly taking
+        the shadow-mutation mutex proves no step/fold is mid-application
+        (both publish before releasing it), closing the drain-returns-early
+        race.
+        """
+        if not self._writer_mutex.acquire(timeout=0.01):
+            return False
+        try:
+            return not self.pending() and not self.fold_in_flight
+        finally:
+            self._writer_mutex.release()
 
     # -- metrics ----------------------------------------------------------------
     def stats(self) -> ServerStats:
@@ -446,4 +585,9 @@ class TableServer:
             last_error=self._last_error,
             batcher=self.batcher.stats(),
             shadow=self._shadow.stats(),
+            warmup=(
+                self.batcher.executors.stats()
+                if self.batcher.executors is not None
+                else None
+            ),
         )

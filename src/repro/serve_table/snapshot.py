@@ -52,6 +52,7 @@ class SnapshotRegistry:
 
     def __init__(self, state: TableState, *, history: int = 8):
         self._lock = threading.Lock()
+        self._published = threading.Condition(self._lock)
         self._current = Snapshot(0, state)
         self._history: deque = deque([self._current], maxlen=max(1, history))
 
@@ -69,7 +70,28 @@ class SnapshotRegistry:
             snap = Snapshot(self._current.seqno + 1, state)
             self._current = snap
             self._history.append(snap)
+            self._published.notify_all()
             return snap
+
+    def wait_for(self, seqno: int, timeout: Optional[float] = None) -> Snapshot:
+        """Block until a snapshot with ``seqno`` or later is published.
+
+        Read-your-writes for async callers: a writer learns the seqno its
+        batch published at, hands it to a reader, and the reader parks here
+        (Condition wait, no polling) until the read path is guaranteed to
+        observe the write.  Returns the current snapshot (whose seqno may
+        exceed the request); raises :class:`TimeoutError` on timeout.
+        """
+        with self._published:
+            ok = self._published.wait_for(
+                lambda: self._current.seqno >= seqno, timeout=timeout
+            )
+            if not ok:
+                raise TimeoutError(
+                    f"snapshot seqno {seqno} not published within {timeout}s "
+                    f"(current {self._current.seqno})"
+                )
+            return self._current
 
     def recent(self, seqno: int) -> Optional[Snapshot]:
         """A recently published snapshot by seqno, if still in the ring."""

@@ -17,6 +17,25 @@ import jax  # noqa: E402  (import after the flag so it takes effect)
 
 import pytest
 
+# The suite compiles hundreds of XLA programs in one process; on some
+# CPU-only hosts the accumulated compiler/runtime state eventually
+# crashes the process (segfault in backend_compile ~240 tests in,
+# reproducible on the untouched seed).  Dropping every jit dispatch
+# cache at module boundaries releases the executables (and their LLVM
+# JIT memory) a finished module pinned, which keeps the single-process
+# tier-1 run inside what the toolchain tolerates.  No test observes the
+# difference: jit cache-size assertions are all intra-test, and the
+# next module simply recompiles what it needs.  (A per-run persistent
+# compilation cache would also dampen this, but deserialized CPU
+# executables abort on the host-callback programs the trainer and
+# checkpoint tests compile — jax 0.4.37 — so it stays off.)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_compiler_state():
+    yield
+    jax.clear_caches()
+
 
 @pytest.fixture(scope="session")
 def mesh8():
