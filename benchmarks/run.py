@@ -35,6 +35,9 @@ BENCHES = [
     ("benchmarks.bench_updates", ["--keys", "131072"], 8),
     # single-route layered execution: fused vs legacy routing vs delta depth
     ("benchmarks.bench_layers", ["--keys", "131072"], 8),
+    # probe path: fingerprint lane vs full-key bisection, u32x1/u64x2,
+    # depth 0 and 8 (parity-asserted; bytes-moved scorecard)
+    ("benchmarks.bench_probe", ["--keys", "131072"], 8),
     # serving engine: request-stream latency/throughput vs batching window,
     # fold-vs-full-compact pause time
     ("benchmarks.bench_serve", ["--keys", "32768"], 8),

@@ -168,12 +168,22 @@ def rows_equal(a: jax.Array, b: jax.Array) -> jax.Array:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("offsets", "keys", "values"),
+    data_fields=("offsets", "keys", "values", "fingerprints"),
     meta_fields=("table_size", "seed", "sorted_within_bucket"),
 )
 @dataclasses.dataclass(frozen=True)
 class HashGraph:
-    """CSR hash table.  ``offsets.shape == (table_size + 2,)``."""
+    """CSR hash table.  ``offsets.shape == (table_size + 2,)``.
+
+    When ``fingerprints`` is present the rows of a bucket are ordered by
+    ``(fingerprint, key)`` instead of plain ``(key)``: the probe path
+    bisects the single-lane fingerprint array first and touches the full
+    key lanes only inside the (typically 0- or 1-key) run of rows whose
+    fingerprint matched — the compact-probe layout of "Compact Parallel
+    Hash Tables on the GPU".  Occurrences of one key stay contiguous
+    either way (equal keys share a fingerprint), so every CSR invariant
+    and the multiset query semantics are unchanged.
+    """
 
     offsets: jax.Array  # (V+2,) int32, monotone
     keys: jax.Array  # (N,) uint32 or (N, L) packed lanes, grouped by bucket
@@ -181,6 +191,7 @@ class HashGraph:
     table_size: int  # V (static)
     seed: int  # murmur seed (static)
     sorted_within_bucket: bool  # True => binary-search queries are valid
+    fingerprints: Optional[jax.Array] = None  # (N,) uint32 probe lane, or None
 
     @property
     def capacity(self) -> int:
@@ -211,31 +222,50 @@ def build_from_buckets(
     *,
     seed: int = hashing.DEFAULT_SEED,
     sort_within_bucket: bool = True,
+    fingerprint: Optional[bool] = None,
 ) -> HashGraph:
     """Build a HashGraph given precomputed bucket ids.
 
     ``buckets`` may contain ``table_size`` to mark padding entries (they land
     in the trash bucket and are excluded from every query).
+
+    ``fingerprint=None`` (auto) stores a probe fingerprint lane exactly when
+    the keys are multi-lane — where the fingerprint halves (or better) the
+    bytes the sorted search touches.  ``True``/``False`` force it.  A
+    fingerprint lane requires ``sort_within_bucket`` (the linear-probe
+    layout never bisects, so the lane would be dead weight); it is dropped
+    silently otherwise.
     """
     keys = keys.astype(jnp.uint32)
     buckets = buckets.astype(jnp.int32)
     if values is None:
         values = jnp.arange(keys.shape[0], dtype=jnp.int32)
-    # Lexicographic sort by (bucket, key) with multi-lane keys compared as
-    # packed big integers: lane L-1 (most significant) right after the
-    # bucket, lane 0 last.  Value columns ride along unsorted-by.
+    if fingerprint is None:
+        fingerprint = keys.ndim == 2
+    fingerprint = bool(fingerprint) and sort_within_bucket
+    # Lexicographic sort by (bucket, [fingerprint,] key) with multi-lane keys
+    # compared as packed big integers: lane L-1 (most significant) first,
+    # lane 0 last.  Value columns ride along unsorted-by.  With the
+    # fingerprint lane enabled the within-bucket order is (fp, key) — equal
+    # keys share a fingerprint, so per-key runs stay contiguous and the
+    # stable sort keeps their input order, same as the plain (key) order.
     key_cols = _cols(keys)
     val_cols = _cols(values)
-    sort_key_ops = tuple(reversed(key_cols))
+    fp_ops: tuple = ()
+    if fingerprint:
+        fp_ops = (hashing.fingerprint32(keys),)
+    sort_key_ops = (*fp_ops, *reversed(key_cols))
     num_keys = 1 + len(sort_key_ops) if sort_within_bucket else 1
     out = jax.lax.sort(
         (buckets, *sort_key_ops, *val_cols), num_keys=num_keys, is_stable=True
     )
     sorted_buckets = out[0]
+    nf = len(fp_ops)
+    sorted_fp = out[1] if fingerprint else None
     sorted_keys = _from_cols(
-        tuple(reversed(out[1 : 1 + len(key_cols)])), keys.ndim
+        tuple(reversed(out[1 + nf : 1 + nf + len(key_cols)])), keys.ndim
     )
-    sorted_values = _from_cols(out[1 + len(key_cols) :], values.ndim)
+    sorted_values = _from_cols(out[1 + nf + len(key_cols) :], values.ndim)
     # offsets[v] = first index whose bucket id >= v ;  offsets[V+1] = N.
     offsets = jnp.searchsorted(
         sorted_buckets, jnp.arange(table_size + 2, dtype=jnp.int32), side="left"
@@ -247,6 +277,7 @@ def build_from_buckets(
         table_size=table_size,
         seed=seed,
         sorted_within_bucket=sort_within_bucket,
+        fingerprints=sorted_fp,
     )
 
 
@@ -257,6 +288,7 @@ def build(
     *,
     seed: int = hashing.DEFAULT_SEED,
     sort_within_bucket: bool = True,
+    fingerprint: Optional[bool] = None,
 ) -> HashGraph:
     """Hash ``keys`` and build the CSR table (Alg. 1, TPU-native form)."""
     buckets = hashing.hash_to_buckets(keys, table_size, seed=seed)
@@ -267,6 +299,7 @@ def build(
         values,
         seed=seed,
         sort_within_bucket=sort_within_bucket,
+        fingerprint=fingerprint,
     )
 
 
@@ -313,7 +346,10 @@ def _segment_searchsorted(
 
 
 def query_locate(
-    hg: HashGraph, queries: jax.Array, buckets: Optional[jax.Array] = None
+    hg: HashGraph,
+    queries: jax.Array,
+    buckets: Optional[jax.Array] = None,
+    qfp: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Locate each query's match run: ``(starts, counts)``.
 
@@ -324,6 +360,14 @@ def query_locate(
 
     ``buckets`` overrides the bucket mapping (distributed shards map keys to
     local buckets through the global split points, not ``hash % V``).
+
+    When the table carries a fingerprint lane, the bucket window is bisected
+    on the single-lane uint32 fingerprints first; the full key lanes are
+    only gathered by the verification bisection *inside* the fingerprint
+    run, which resolves fingerprint collisions exactly.  ``qfp`` supplies
+    precomputed query fingerprints (the fused distributed route hashes each
+    routed batch once and probes every layer with it); left ``None`` they
+    are derived here.  Ignored for tables without the lane.
     """
     if not hg.sorted_within_bucket:
         raise ValueError("query_locate needs a bucket-sorted HashGraph")
@@ -331,20 +375,32 @@ def query_locate(
     b = hg.bucket_of(q) if buckets is None else buckets.astype(jnp.int32)
     starts = hg.offsets[b]
     ends = hg.offsets[b + 1]
+    if hg.fingerprints is not None:
+        if qfp is None:
+            qfp = hashing.fingerprint32(q)
+        qfp = qfp.astype(jnp.uint32)
+        fl = _segment_searchsorted(hg.fingerprints, starts, ends, qfp, side="left")
+        fr = _segment_searchsorted(hg.fingerprints, starts, ends, qfp, side="right")
+        # Verification pass: exact key bisection confined to [fl, fr) — the
+        # run of rows whose fingerprint matched (usually 0 or 1 distinct key).
+        starts, ends = fl, fr
     left = _segment_searchsorted(hg.keys, starts, ends, q, side="left")
     right = _segment_searchsorted(hg.keys, starts, ends, q, side="right")
     return left.astype(jnp.int32), (right - left).astype(jnp.int32)
 
 
 def query_count_sorted(
-    hg: HashGraph, queries: jax.Array, buckets: Optional[jax.Array] = None
+    hg: HashGraph,
+    queries: jax.Array,
+    buckets: Optional[jax.Array] = None,
+    qfp: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Exact multiplicity of each query key via per-bucket binary search.
 
     Requires ``sorted_within_bucket=True``.  O(log bucket_len) gathers per
     query with no cap on duplicates — the beyond-paper query path.
     """
-    _, counts = query_locate(hg, queries, buckets)
+    _, counts = query_locate(hg, queries, buckets, qfp=qfp)
     return counts
 
 
@@ -489,6 +545,14 @@ def lookup_first(
     b = hg.bucket_of(q) if buckets is None else buckets.astype(jnp.int32)
     starts = hg.offsets[b]
     ends = hg.offsets[b + 1]
+    if hg.fingerprints is not None:
+        qfp = hashing.fingerprint32(q)
+        starts = _segment_searchsorted(
+            hg.fingerprints, starts, ends, qfp, side="left"
+        )
+        ends = _segment_searchsorted(
+            hg.fingerprints, starts, ends, qfp, side="right"
+        )
     left = _segment_searchsorted(hg.keys, starts, ends, q, side="left")
     n = hg.keys.shape[0]
     found = (left < ends) & rows_equal(hg.keys[jnp.clip(left, 0, n - 1)], q)

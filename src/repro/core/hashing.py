@@ -28,6 +28,13 @@ _N = jnp.uint32(0xE6546B64)
 
 DEFAULT_SEED = 0x9747B28C  # seed used by the reference murmur CLI examples
 
+# Seed for the probe fingerprint lane.  Deliberately distinct from
+# DEFAULT_SEED: the fingerprint must be mixed *independently* of the
+# bucket hash, otherwise rows that collide into one bucket would be
+# biased toward colliding on the fingerprint too (the fingerprint's job
+# is exactly to separate keys the bucket hash could not).
+FINGERPRINT_SEED = 0x5BD1E995  # the MurmurHash2 multiplier, reused as a seed
+
 
 def _rotl32(x: jax.Array, r: int) -> jax.Array:
     r = r % 32
@@ -104,6 +111,19 @@ def murmur3_packed(keys: jax.Array, seed: int = DEFAULT_SEED) -> jax.Array:
     if keys.ndim == 1:
         return murmur3_u32(keys, seed=seed)
     return murmur3_stream(keys, seed=seed, axis=-1)
+
+
+def fingerprint32(keys: jax.Array, seed: int = FINGERPRINT_SEED) -> jax.Array:
+    """32-bit probe fingerprint of 1-lane ``(N,)`` or packed ``(N, L)`` keys.
+
+    Same MurmurHash3 stream as :func:`murmur3_packed` but under
+    ``FINGERPRINT_SEED``, so the fingerprint is statistically independent
+    of the bucket assignment (``hash_to_buckets`` under ``DEFAULT_SEED``).
+    The sorted probe path (:func:`repro.core.hashgraph.query_locate`)
+    bisects this single uint32 lane first and touches the full key lanes
+    only inside the run of rows whose fingerprint already matched.
+    """
+    return murmur3_packed(keys, seed=seed)
 
 
 def hash_to_buckets(keys: jax.Array, table_size: int, seed: int = DEFAULT_SEED) -> jax.Array:

@@ -122,6 +122,7 @@ def build_sharded(
     hash_splits: Optional[jax.Array] = None,
     local_range_cap: Optional[int] = None,
     bucket_stride: int = 1,
+    fingerprint: Optional[bool] = None,
 ) -> DistributedHashGraph:
     """Build the distributed HashGraph from this device's local ``keys``.
 
@@ -140,7 +141,11 @@ def build_sharded(
     dispatch serves the whole layer stack.  ``local_range_cap`` /
     ``bucket_stride`` size the local bucket space (deltas stride the base's
     bucket map down to O(batch) offsets instead of paying the base's
-    O(hash_range / D) arrays).  Call inside ``shard_map``.
+    O(hash_range / D) arrays).  ``fingerprint`` selects the probe
+    fingerprint lane for the local CSR (None = auto by key width, see
+    :func:`repro.core.hashgraph.build_from_buckets`); the fingerprints are
+    derived owner-side from the routed keys, so the exchange itself is
+    unchanged.  Call inside ``shard_map``.
     """
     axis_names = tuple(axis_names)
     keys = keys.astype(jnp.uint32)
@@ -193,7 +198,13 @@ def build_sharded(
     lo = splits[rank]
     buckets = _local_buckets(rkeys, lo, hash_range, local_cap, seed, bucket_stride)
     local = hashgraph.build_from_buckets(
-        rkeys, buckets, local_cap, rvalues, seed=seed, sort_within_bucket=True
+        rkeys,
+        buckets,
+        local_cap,
+        rvalues,
+        seed=seed,
+        sort_within_bucket=True,
+        fingerprint=fingerprint,
     )
     return DistributedHashGraph(
         local=local,
@@ -257,6 +268,23 @@ def _route_queries(
         rh, is_pad, lo, dhg.local_range_cap, dhg.bucket_stride
     )
     return rq, route, rbuckets, capacity
+
+
+def _routed_fingerprints(
+    layers: Sequence[DistributedHashGraph], rq: jax.Array
+) -> Optional[jax.Array]:
+    """Probe fingerprints of a routed query batch, or None if no layer
+    carries a fingerprint lane.
+
+    Hashed once per exchange round and shared by every layer's locate —
+    the fused stack pays one ``fingerprint32`` per routed batch, not per
+    layer.  Layers without the lane simply ignore the precomputed values
+    (``query_locate`` drops ``qfp`` for plain tables), so mixed stacks
+    stay correct.
+    """
+    if any(layer.local.fingerprints is not None for layer in layers):
+        return hashing.fingerprint32(rq)
+    return None
 
 
 def _tombstone_epochs(
@@ -374,6 +402,7 @@ def query_layers_sharded(
     base = layers[0]
     rq, route, rh, is_pad, lo, _ = _route_queries_once(base, queries, capacity_slack)
     match_e = _tombstone_epochs(rq, tombstones)
+    rfp = _routed_fingerprints(layers, rq)
     total = jnp.zeros(rq.shape[0], jnp.int32)
     for epoch, layer in enumerate(layers):
         rb = _rebase_buckets(rh, is_pad, lo, layer.local_range_cap, layer.bucket_stride)
@@ -382,7 +411,7 @@ def query_layers_sharded(
                 layer.local, rq, max_probe=max_probe, buckets=rb
             )
         else:
-            c = hashgraph.query_count_sorted(layer.local, rq, buckets=rb)
+            c = hashgraph.query_count_sorted(layer.local, rq, buckets=rb, qfp=rfp)
         total = total + _mask_counts(c, rq, tombstones, epoch, match_e)
     # One merged return trip carries the whole stack's counts.
     return exchange.combine(total, route, base.axis_names, fill=jnp.int32(0))
@@ -543,11 +572,12 @@ def _layer_run_descriptors(
     (``R`` = routed slots) addressing ``jnp.concatenate(tables)``.
     """
     match_e = _tombstone_epochs(rq, tombstones)
+    rfp = _routed_fingerprints(layers, rq)
     starts_l, counts_l, tables = [], [], []
     off = 0
     for epoch, layer in enumerate(layers):
         rb = _rebase_buckets(rh, is_pad, lo, layer.local_range_cap, layer.bucket_stride)
-        s, c = hashgraph.query_locate(layer.local, rq, buckets=rb)
+        s, c = hashgraph.query_locate(layer.local, rq, buckets=rb, qfp=rfp)
         c = _mask_counts(c, rq, tombstones, epoch, match_e)
         starts_l.append(s + off)
         counts_l.append(c)
@@ -1006,7 +1036,12 @@ def build_query_hashgraph_sharded(
     the build-vs-query benchmark)."""
     rq, _, rbuckets, _ = _route_queries(dhg, queries, capacity_slack)
     return hashgraph.build_from_buckets(
-        rq, rbuckets, dhg.local_range_cap, seed=dhg.seed, sort_within_bucket=True
+        rq,
+        rbuckets,
+        dhg.local_range_cap,
+        seed=dhg.seed,
+        sort_within_bucket=True,
+        fingerprint=dhg.local.fingerprints is not None,
     )
 
 
@@ -1098,6 +1133,7 @@ def fold_layers_local(
         vals_cat,
         seed=base.seed,
         sort_within_bucket=True,
+        fingerprint=base.local.fingerprints is not None,
     )
     return DistributedHashGraph(
         local=local,

@@ -65,6 +65,7 @@ def dhg_specs(dhg: DistributedHashGraph) -> DistributedHashGraph:
         table_size=dhg.local.table_size,
         seed=dhg.local.seed,
         sorted_within_bucket=dhg.local.sorted_within_bucket,
+        fingerprints=shard0 if dhg.local.fingerprints is not None else None,
     )
     return DistributedHashGraph(
         local=local,

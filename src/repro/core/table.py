@@ -63,6 +63,7 @@ def _dhg_out_specs(
     local_cap: int,
     seed: int,
     bucket_stride: int = 1,
+    fingerprint: bool = False,
 ):
     ax = tuple(axis_names)
     shard0 = P(ax)  # stack local shards along dim 0 in the global view
@@ -73,6 +74,7 @@ def _dhg_out_specs(
         table_size=local_cap,
         seed=seed,
         sorted_within_bucket=True,
+        fingerprints=shard0 if fingerprint else None,
     )
     return DistributedHashGraph(
         local=local,
@@ -135,11 +137,21 @@ class DistributedHashTable:
     coherent_deltas: bool = True
     fused_routing: Optional[bool] = None
     skew_guard: bool = True
+    fingerprint: Optional[bool] = None
 
     def __post_init__(self):
         self.axis_names = tuple(self.axis_names)
         if self.schema is None:
             self.schema = TableSchema()
+        # Probe fingerprint lane (None = auto): on for multi-lane keys, where
+        # the fingerprint bisection halves the bytes of the wide-span sorted
+        # search; off for 1-lane keys (the key array is already one lane).
+        # Applied uniformly to base, delta, fold and compact builds so every
+        # layer of a state shares one probe layout.
+        if self.fingerprint is None:
+            self.use_fingerprint = self.schema.key_lanes > 1
+        else:
+            self.use_fingerprint = bool(self.fingerprint)
         self.num_devices = 1
         for a in self.axis_names:
             self.num_devices *= self.mesh.shape[a]
@@ -151,6 +163,11 @@ class DistributedHashTable:
         # Diagnostics counter (not part of the static jit identity): inserts
         # routed to an incoherent delta by the skew guard.
         self.skew_fallbacks = 0
+        # Compact-sizing memo, keyed by state signature (the ExecutorGrid
+        # idiom): structurally identical states reuse the derived
+        # (capacity, rebuild_rows) pair instead of re-running the
+        # exec_live_count device round trip per fold cycle.
+        self._sizing_memo = {}
 
     # -- sharding helpers ----------------------------------------------------
     def key_sharding(self) -> NamedSharding:
@@ -178,6 +195,7 @@ class DistributedHashTable:
             self._local_cap_for(hr) if local_cap is None else local_cap,
             self.seed,
             bucket_stride,
+            fingerprint=self.use_fingerprint,
         )
 
     # -- build ----------------------------------------------------------------
@@ -233,6 +251,7 @@ class DistributedHashTable:
             range_slack=self.range_slack,
             seed=self.seed,
             capacity=capacity,
+            fingerprint=self.use_fingerprint,
         )
 
     def _num_bins_for(self, hash_range: int) -> Optional[int]:
@@ -328,6 +347,7 @@ class DistributedHashTable:
                 hash_splits=sp,
                 local_range_cap=local_cap,
                 bucket_stride=stride,
+                fingerprint=self.use_fingerprint,
             )
 
         return shard_map(
@@ -486,6 +506,14 @@ class DistributedHashTable:
         live count cannot be read back, so the worst-case sizing applies
         (pass an explicit ``capacity`` to pin it).  ``capacity`` overrides
         the per-destination slot size of the rebuild exchange either way.
+
+        The derived sizing is memoized per state *signature* (structure,
+        not data — the ``ExecutorGrid`` idiom): a background maintenance
+        loop cycling through identical insert/delete/fold structures pays
+        the ``exec_live_count`` round trip once per structure, not once
+        per compaction.  A memo hit with a drifted live count only risks
+        a *smaller-than-ideal* budget, and any live row it truncates is
+        tallied into ``num_dropped`` — never silent.
         """
         st = as_state(self, state)
         # Per-DEVICE concatenated row count: layer arrays are global views,
@@ -499,16 +527,24 @@ class DistributedHashTable:
                 for x in jax.tree_util.tree_leaves(st)
             )
             if not tracing:
-                live = int(plans.exec_live_count(self, st))
-                live_local = _cdiv(live, self.num_devices)
-                # Post-deal per-device row budget: balanced live share plus
-                # the slack margin (skew beyond it is truncated — counted in
-                # num_dropped, never silent).
-                rebuild_rows = max(64, int(live_local * self.capacity_slack) + 8)
-                rebuild_rows = min(_cdiv(rebuild_rows, 8) * 8, n_cat_local)
-                capacity = multi_hashgraph.default_capacity(
-                    rebuild_rows, self.num_devices, self.capacity_slack
-                ) + _cdiv(rebuild_rows, self.num_devices)
+                sig = plans.state_signature(st)
+                cached = self._sizing_memo.get(sig)
+                if cached is not None:
+                    capacity, rebuild_rows = cached
+                else:
+                    live = int(plans.exec_live_count(self, st))
+                    live_local = _cdiv(live, self.num_devices)
+                    # Post-deal per-device row budget: balanced live share
+                    # plus the slack margin (skew beyond it is truncated —
+                    # counted in num_dropped, never silent).
+                    rebuild_rows = max(64, int(live_local * self.capacity_slack) + 8)
+                    rebuild_rows = min(_cdiv(rebuild_rows, 8) * 8, n_cat_local)
+                    capacity = multi_hashgraph.default_capacity(
+                        rebuild_rows, self.num_devices, self.capacity_slack
+                    ) + _cdiv(rebuild_rows, self.num_devices)
+                    if len(self._sizing_memo) >= 128:  # bounded, like the grid
+                        self._sizing_memo.clear()
+                    self._sizing_memo[sig] = (capacity, rebuild_rows)
             else:
                 # Balanced share of the worst case (all rows live) plus a
                 # full round-robin allowance for the sentinel rows.

@@ -46,12 +46,29 @@ def dedup_mask(tokens: jax.Array, seed: int = hashing.DEFAULT_SEED) -> jax.Array
     return first == jnp.arange(n, dtype=jnp.int32)
 
 
+def _narrow_by_fingerprint(hg, starts, ends, q):
+    """Confine a bucket window to the query's fingerprint run.
+
+    Fingerprint-laned tables sort buckets by (fingerprint, key), so the
+    direct key bisection below is only valid inside the run of rows whose
+    fingerprint matches.  No-op for plain tables (dedup's default: 1-lane
+    fingerprint keys carry no probe lane).
+    """
+    if hg.fingerprints is None:
+        return starts, ends
+    qfp = hashing.fingerprint32(q)
+    fl = hashgraph._segment_searchsorted(hg.fingerprints, starts, ends, qfp, side="left")
+    fr = hashgraph._segment_searchsorted(hg.fingerprints, fl, ends, qfp, side="right")
+    return fl, fr
+
+
 def _min_value_per_key(hg: hashgraph.HashGraph, queries: jax.Array) -> jax.Array:
     """Smallest stored value among table keys equal to each query."""
     q = queries.astype(jnp.uint32)
     b = hg.bucket_of(q)
     starts = hg.offsets[b]
     ends = hg.offsets[b + 1]
+    starts, ends = _narrow_by_fingerprint(hg, starts, ends, q)
     left = hashgraph._segment_searchsorted(hg.keys, starts, ends, q, side="left")
     right = hashgraph._segment_searchsorted(hg.keys, starts, ends, q, side="right")
     # keys equal to q occupy [left, right); values are not sorted within the
@@ -111,7 +128,11 @@ def _state_specs(table):
     from repro.core.table import _dhg_out_specs
 
     return _dhg_out_specs(
-        table.axis_names, table.hash_range, table.local_range_cap, table.seed
+        table.axis_names,
+        table.hash_range,
+        table.local_range_cap,
+        table.seed,
+        fingerprint=table.use_fingerprint,
     )
 
 
@@ -136,6 +157,7 @@ def _min_value_sharded(dhg, queries):
     hg = dhg.local
     starts = hg.offsets[rbuckets]
     ends = hg.offsets[rbuckets + 1]
+    starts, ends = _narrow_by_fingerprint(hg, starts, ends, rq)
     left = hashgraph._segment_searchsorted(hg.keys, starts, ends, rq, side="left")
     right = hashgraph._segment_searchsorted(hg.keys, starts, ends, rq, side="right")
     max_run = min(64, hg.keys.shape[0])

@@ -1,0 +1,279 @@
+"""Block-shape autotuner for the probe/gather Pallas kernels.
+
+Sweeps ``block_rows`` candidates for each kernel wrapped by
+:mod:`repro.kernels.ops` and records the fastest per
+``(kernel, backend, lane width, log2-size bucket)``.  Winners live in an
+in-process cache consulted by :func:`repro.kernels.common.resolve_block_rows`
+— i.e. every ops call that leaves ``block_rows=None`` — and round-trip
+through a JSON artifact so a one-off sweep seeds future processes.  AOT
+warmup (``plans.py`` / ``warm_server``) traces through the ops wrappers, so
+executors compiled after :func:`load_cache` bake the tuned shapes in.
+
+Usage::
+
+    from repro.kernels import autotune
+    autotune.autotune(sizes=(1 << 14, 1 << 20))  # sweep, fill cache
+    autotune.save_cache()                        # persist winners
+    # later / another process
+    autotune.load_cache()                        # ops defaults now tuned
+
+Cache file format (version 1)::
+
+    {"version": 1,
+     "entries": {"csr_gather|cpu|w2|b20": {
+         "block_rows": 16, "best_ms": 0.41,
+         "timings_ms": {"1": 0.9, "8": 0.52, "16": 0.41, ...}}}}
+
+``REPRO_AUTOTUNE_CACHE`` names the default JSON path for save and load
+(falls back to ``autotune_cache.json`` in the working directory).
+
+The sweep calls the public ops wrappers with an *explicit* ``block_rows``
+override, so timing never re-enters the resolver (no recursion, and a
+half-filled cache cannot skew the measurements it is being filled from).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+_DEFAULT_FILE = "autotune_cache.json"
+
+DEFAULT_CANDIDATES: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+#: kernels the sweep knows how to drive — the resolve keys used by ops.py.
+KERNELS: Tuple[str, ...] = (
+    "murmur",
+    "bin_histogram",
+    "bucket_probe",
+    "csr_gather",
+    "csr_gather_batched",
+)
+
+# In-process winner cache: key → block_rows.  ``_details`` keeps the full
+# sweep record per key for the JSON artifact.
+_cache: Dict[str, int] = {}
+_details: Dict[str, dict] = {}
+
+
+def _size_bucket(n: int) -> int:
+    """log2 bucket: sizes within a factor of 2 share one tuned shape."""
+    return max(0, int(n) - 1).bit_length()
+
+
+def _key(kernel: str, backend: str, width: int, bucket: int) -> str:
+    return f"{kernel}|{backend}|w{width}|b{bucket}"
+
+
+def cached_block_rows(
+    kernel: str, *, n: Optional[int] = None, width: int = 1
+) -> Optional[int]:
+    """Tuned ``block_rows`` for a call, or None if nothing relevant is cached.
+
+    Exact (kernel, backend, width, size-bucket) hit first; otherwise the
+    nearest size bucket tuned for the same kernel/backend/width — a sweep
+    at 1M rows still informs a 4M-row call.  Hot path for every ops call
+    with ``block_rows=None``, so the empty-cache early-out matters.
+    """
+    if not _cache or n is None:
+        return None
+    backend = jax.default_backend()
+    bucket = _size_bucket(n)
+    hit = _cache.get(_key(kernel, backend, width, bucket))
+    if hit is not None:
+        return hit
+    prefix = f"{kernel}|{backend}|w{width}|b"
+    buckets = [int(k[len(prefix) :]) for k in _cache if k.startswith(prefix)]
+    if not buckets:
+        return None
+    nearest = min(buckets, key=lambda b: abs(b - bucket))
+    return _cache[prefix + str(nearest)]
+
+
+def clear_cache() -> None:
+    """Drop all in-process winners (tests; the JSON artifact is untouched)."""
+    _cache.clear()
+    _details.clear()
+
+
+def _default_path() -> str:
+    return os.environ.get(_ENV_CACHE, _DEFAULT_FILE)
+
+
+def save_cache(path: Optional[str] = None) -> str:
+    """Write the in-process winners to the JSON artifact; returns the path."""
+    path = path or _default_path()
+    entries = {}
+    for key, br in sorted(_cache.items()):
+        entries[key] = _details.get(key, {"block_rows": int(br)})
+    with open(path, "w") as f:
+        json.dump({"version": 1, "entries": entries}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_cache(path: Optional[str] = None) -> int:
+    """Merge winners from the JSON artifact; returns entries loaded.
+
+    Missing file is not an error (0 loaded) — callers opportunistically
+    load at startup and fall back to ``common.DEFAULT_BLOCK_ROWS``.
+    """
+    path = path or _default_path()
+    if not os.path.exists(path):
+        return 0
+    with open(path) as f:
+        blob = json.load(f)
+    entries = blob.get("entries", {})
+    for key, rec in entries.items():
+        _cache[key] = int(rec["block_rows"])
+        _details[key] = dict(rec)
+    return len(entries)
+
+
+# ---------------------------------------------------------------------------
+# Sweep drivers: build representative inputs and invoke the public ops
+# wrapper with an explicit block_rows.  Shapes mirror how the table code
+# actually calls each kernel (n = the resolver's dominant-size argument).
+# ---------------------------------------------------------------------------
+
+
+def _driver(kernel: str, n: int, width: int, interpret: Optional[bool]):
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0xA07)
+    if kernel == "murmur":
+        keys = jnp.asarray(rng.integers(0, 1 << 32, size=n, dtype=np.uint32))
+        return lambda br: ops.hash_to_buckets(
+            keys, max(8, n), block_rows=br, interpret=interpret
+        )
+    if kernel == "bin_histogram":
+        num_bins = 256
+        bins = jnp.asarray(rng.integers(0, num_bins, size=n, dtype=np.int32))
+        return lambda br: ops.bin_histogram(
+            bins, num_bins, block_rows=br, interpret=interpret
+        )
+    if kernel == "bucket_probe":
+        nv = max(8, n // 8)
+        table = jnp.asarray(
+            np.sort(rng.integers(0, 1 << 32, size=n, dtype=np.uint32))
+        )
+        edges = np.linspace(0, n, nv + 1).astype(np.int32)
+        b = rng.integers(0, nv, size=n, dtype=np.int32)
+        starts = jnp.asarray(edges[b])
+        ends = jnp.asarray(edges[b + 1])
+        queries = jnp.asarray(rng.integers(0, 1 << 32, size=n, dtype=np.uint32))
+        return lambda br: ops.bucket_probe(
+            table, starts, ends, queries, block_rows=br, interpret=interpret
+        )
+    if kernel in ("csr_gather", "csr_gather_batched"):
+        run = 8
+        shape = (n,) if width == 1 else (n, width)
+        table = jnp.asarray(rng.integers(0, 1 << 31, size=shape, dtype=np.int32))
+        if kernel == "csr_gather":
+            rows = max(1, n // run)
+            starts = jnp.arange(rows, dtype=jnp.int32) * run
+            counts = jnp.full((rows,), run, jnp.int32)
+            return lambda br: ops.csr_gather(
+                starts, counts, table, capacity=n, block_rows=br, interpret=interpret
+            )
+        s_dim = 4
+        rows = max(1, n // (run * s_dim))
+        starts = jnp.tile(jnp.arange(rows, dtype=jnp.int32)[None] * run, (s_dim, 1))
+        counts = jnp.full((s_dim, rows), run, jnp.int32)
+        return lambda br: ops.csr_gather_batched(
+            starts,
+            counts,
+            table,
+            capacity=rows * run,
+            block_rows=br,
+            interpret=interpret,
+        )
+    raise ValueError(f"unknown kernel {kernel!r} (one of {KERNELS})")
+
+
+def _time(fn, repeats: int) -> float:
+    """Best-of wall time in ms; first call (compile) excluded."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def sweep_kernel(
+    kernel: str,
+    *,
+    n: int,
+    width: int = 1,
+    candidates: Sequence[int] = DEFAULT_CANDIDATES,
+    repeats: int = 3,
+    interpret: Optional[bool] = None,
+) -> dict:
+    """Time every ``block_rows`` candidate for one kernel/size/width cell.
+
+    Stores the winner in the in-process cache (keyed by backend and the
+    log2 size bucket of ``n``) and returns the full record::
+
+        {"key": ..., "block_rows": 16, "best_ms": ..., "timings_ms": {...}}
+    """
+    call = _driver(kernel, n, width, interpret)
+    timings = {}
+    for cand in candidates:
+        timings[str(int(cand))] = _time(lambda c=cand: call(int(c)), repeats)
+    winner = min(timings, key=timings.get)
+    key = _key(kernel, jax.default_backend(), width, _size_bucket(n))
+    record = {
+        "key": key,
+        "block_rows": int(winner),
+        "best_ms": timings[winner],
+        "timings_ms": timings,
+        "n": int(n),
+        "width": int(width),
+    }
+    _cache[key] = int(winner)
+    _details[key] = record
+    return record
+
+
+def autotune(
+    kernels: Sequence[str] = KERNELS,
+    *,
+    sizes: Sequence[int] = (1 << 16, 1 << 20),
+    widths: Sequence[int] = (1, 2),
+    candidates: Sequence[int] = DEFAULT_CANDIDATES,
+    repeats: int = 3,
+    interpret: Optional[bool] = None,
+    save: bool = False,
+) -> list:
+    """Sweep the kernel × size × width grid; optionally persist the artifact.
+
+    ``widths`` only fans out the gather kernels (murmur/histogram/probe move
+    single-lane streams regardless of schema width).  Returns every sweep
+    record; winners land in the in-process cache as they are measured.
+    """
+    records = []
+    for kernel in kernels:
+        kwidths = widths if kernel.startswith("csr_gather") else (1,)
+        for n in sizes:
+            for width in kwidths:
+                records.append(
+                    sweep_kernel(
+                        kernel,
+                        n=int(n),
+                        width=int(width),
+                        candidates=candidates,
+                        repeats=repeats,
+                        interpret=interpret,
+                    )
+                )
+    if save:
+        save_cache()
+    return records

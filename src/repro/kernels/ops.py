@@ -3,6 +3,17 @@
 Each wrapper handles padding/reshaping to the TPU ``(rows, 128)`` lane
 layout and chooses interpret mode automatically off-TPU (this container is
 CPU-only; TPU is the lowering target, interpret mode the validator).
+
+``block_rows`` left ``None`` resolves through
+:func:`repro.kernels.common.resolve_block_rows` — autotuned winner if the
+:mod:`repro.kernels.autotune` cache holds one for the call's (kernel,
+backend, width, size) bucket, the ``common.DEFAULT_BLOCK_ROWS`` table
+otherwise.  Resolution happens in the un-jitted public wrapper, *before*
+the jitted inner function, so the jit cache is keyed on the resolved
+integer: loading a new autotune cache changes subsequent calls without
+invalidating or poisoning existing compiled programs.  Plans/AOT warmup
+(``plans.py``/``warm_server``) trace through these wrappers, so executors
+compiled after ``autotune.load_cache()`` bake the tuned shapes in.
 """
 from __future__ import annotations
 
@@ -27,16 +38,32 @@ def _auto(interpret: Optional[bool]) -> bool:
     return common.use_interpret_mode() if interpret is None else interpret
 
 
-@partial(jax.jit, static_argnames=("table_size", "seed", "block_rows", "interpret"))
 def hash_to_buckets(
     keys: jax.Array,
     table_size: int,
     seed: int = hashing.DEFAULT_SEED,
     *,
-    block_rows: int = 64,
+    block_rows: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Fused murmur3+mod of a flat (N,) uint32 key array → (N,) int32."""
+    block_rows = common.resolve_block_rows(
+        "murmur", block_rows, n=keys.shape[0]
+    )
+    return _hash_to_buckets_jit(
+        keys, table_size, seed, block_rows=block_rows, interpret=interpret
+    )
+
+
+@partial(jax.jit, static_argnames=("table_size", "seed", "block_rows", "interpret"))
+def _hash_to_buckets_jit(
+    keys: jax.Array,
+    table_size: int,
+    seed: int,
+    *,
+    block_rows: int,
+    interpret: Optional[bool],
+) -> jax.Array:
     n = keys.shape[0]
     padded, _ = common.pad_to_block_1d(keys.astype(jnp.uint32), LANES * block_rows, 0)
     out = _murmur.murmur_bucket_2d(
@@ -49,14 +76,11 @@ def hash_to_buckets(
     return out.reshape(-1)[:n]
 
 
-@partial(
-    jax.jit, static_argnames=("num_bins", "block_rows", "bin_tile", "interpret")
-)
 def bin_histogram(
     bins: jax.Array,
     num_bins: int,
     *,
-    block_rows: int = 8,
+    block_rows: Optional[int] = None,
     bin_tile: int = 256,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
@@ -64,6 +88,25 @@ def bin_histogram(
 
     ``num_bins`` is padded up to a multiple of ``bin_tile`` internally.
     """
+    block_rows = common.resolve_block_rows(
+        "bin_histogram", block_rows, n=bins.shape[0]
+    )
+    return _bin_histogram_jit(
+        bins, num_bins, block_rows=block_rows, bin_tile=bin_tile, interpret=interpret
+    )
+
+
+@partial(
+    jax.jit, static_argnames=("num_bins", "block_rows", "bin_tile", "interpret")
+)
+def _bin_histogram_jit(
+    bins: jax.Array,
+    num_bins: int,
+    *,
+    block_rows: int,
+    bin_tile: int,
+    interpret: Optional[bool],
+) -> jax.Array:
     padded_bins = cdiv(num_bins, bin_tile) * bin_tile
     x, _ = common.pad_to_block_1d(bins.astype(jnp.int32), LANES * block_rows, -1)
     out = _hist.histogram_2d(
@@ -76,7 +119,6 @@ def bin_histogram(
     return out[:num_bins]
 
 
-@partial(jax.jit, static_argnames=("max_probe", "block_rows", "interpret"))
 def bucket_probe(
     table_keys: jax.Array,
     starts: jax.Array,
@@ -84,10 +126,35 @@ def bucket_probe(
     queries: jax.Array,
     *,
     max_probe: int = 64,
-    block_rows: int = 8,
+    block_rows: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Per-query match count by linear bucket scan (paper's query loop)."""
+    block_rows = common.resolve_block_rows(
+        "bucket_probe", block_rows, n=queries.shape[0]
+    )
+    return _bucket_probe_jit(
+        table_keys,
+        starts,
+        ends,
+        queries,
+        max_probe=max_probe,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("max_probe", "block_rows", "interpret"))
+def _bucket_probe_jit(
+    table_keys: jax.Array,
+    starts: jax.Array,
+    ends: jax.Array,
+    queries: jax.Array,
+    *,
+    max_probe: int,
+    block_rows: int,
+    interpret: Optional[bool],
+) -> jax.Array:
     nq = queries.shape[0]
     blk = LANES * block_rows
     s, _ = common.pad_to_block_1d(starts.astype(jnp.int32), blk, 0)
@@ -109,9 +176,6 @@ def bucket_probe(
 _INT32_MAX = jnp.iinfo(jnp.int32).max
 
 
-@partial(
-    jax.jit, static_argnames=("capacity", "fill", "block_rows", "interpret")
-)
 def csr_gather(
     starts: jax.Array,
     counts: jax.Array,
@@ -119,7 +183,7 @@ def csr_gather(
     *,
     capacity: int,
     fill: int = -1,
-    block_rows: int = 8,
+    block_rows: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """CSR match-run compaction (pass 2 of count→prefix-sum→gather retrieval).
@@ -139,6 +203,36 @@ def csr_gather(
     returned row indices with a plain XLA gather, so the bisection cost does
     not scale with ``C``.  ``gathered`` has shape ``(capacity, C)``.
     """
+    block_rows = common.resolve_block_rows(
+        "csr_gather",
+        block_rows,
+        n=capacity,
+        width=1 if table.ndim == 1 else table.shape[-1],
+    )
+    return _csr_gather_jit(
+        starts,
+        counts,
+        table,
+        capacity=capacity,
+        fill=fill,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+
+
+@partial(
+    jax.jit, static_argnames=("capacity", "fill", "block_rows", "interpret")
+)
+def _csr_gather_jit(
+    starts: jax.Array,
+    counts: jax.Array,
+    table: jax.Array,
+    *,
+    capacity: int,
+    fill: int,
+    block_rows: int,
+    interpret: Optional[bool],
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     num_rows = counts.shape[0]
     counts = counts.astype(jnp.int32)
     out_dtype = table.dtype
@@ -190,9 +284,6 @@ def csr_gather(
     return jnp.minimum(offsets, capacity), row_idx, gathered, num_dropped
 
 
-@partial(
-    jax.jit, static_argnames=("capacity", "fill", "block_rows", "interpret")
-)
 def csr_gather_batched(
     starts: jax.Array,
     counts: jax.Array,
@@ -200,7 +291,7 @@ def csr_gather_batched(
     *,
     capacity: int,
     fill: int = -1,
-    block_rows: int = 8,
+    block_rows: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused per-source CSR compaction: S gathers in one kernel launch.
@@ -218,6 +309,36 @@ def csr_gather_batched(
     across sources.  Same dtype contract as :func:`csr_gather` (int32 lanes,
     uint32 bitcast through, multi-column tables resolve the bisection once).
     """
+    block_rows = common.resolve_block_rows(
+        "csr_gather_batched",
+        block_rows,
+        n=capacity,
+        width=1 if table.ndim == 1 else table.shape[-1],
+    )
+    return _csr_gather_batched_jit(
+        starts,
+        counts,
+        table,
+        capacity=capacity,
+        fill=fill,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+
+
+@partial(
+    jax.jit, static_argnames=("capacity", "fill", "block_rows", "interpret")
+)
+def _csr_gather_batched_jit(
+    starts: jax.Array,
+    counts: jax.Array,
+    table: jax.Array,
+    *,
+    capacity: int,
+    fill: int,
+    block_rows: int,
+    interpret: Optional[bool],
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     s_dim, num_rows = counts.shape
     counts = counts.astype(jnp.int32)
     out_dtype = table.dtype
@@ -300,9 +421,6 @@ def interleave_layer_runs(starts, counts, tables):
     return starts_i, counts_i, table_cat
 
 
-@partial(
-    jax.jit, static_argnames=("capacity", "fill", "block_rows", "interpret")
-)
 def csr_gather_layers(
     starts: jax.Array,
     counts: jax.Array,
@@ -310,7 +428,7 @@ def csr_gather_layers(
     *,
     capacity: int,
     fill: int = -1,
-    block_rows: int = 8,
+    block_rows: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused owner-side gather across a layer stack: one launch for L·S CSRs.

@@ -1,0 +1,112 @@
+"""Autotuner — sweep smoke, cache round-trip, resolution order, compile-through.
+
+Everything runs in interpret mode at tiny sizes with a reduced candidate
+set: CI asserts the *machinery* (sweeps produce winners, the JSON artifact
+round-trips, tuned shapes actually compile and agree with the defaults),
+not the timings — wall-clock on shared runners is noise.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, common, ops
+
+
+@pytest.fixture(autouse=True)
+def _clean_cache():
+    """Every test starts and ends with an empty in-process winner cache."""
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+def test_defaults_table_and_override():
+    """Resolution order: override > tuned > DEFAULT_BLOCK_ROWS."""
+    assert common.resolve_block_rows("murmur") == 64
+    for k in ("bin_histogram", "bucket_probe", "csr_gather", "csr_gather_batched"):
+        assert common.resolve_block_rows(k) == 8
+    assert common.resolve_block_rows("murmur", 16) == 16  # override wins
+    with pytest.raises(KeyError):
+        common.resolve_block_rows("no_such_kernel")
+
+
+def test_sweep_fills_cache_and_resolver_uses_it():
+    rec = autotune.sweep_kernel(
+        "murmur", n=1024, candidates=(1, 8), repeats=1, interpret=True
+    )
+    assert rec["block_rows"] in (1, 8)
+    assert set(rec["timings_ms"]) == {"1", "8"}
+    assert autotune.cached_block_rows("murmur", n=1024) == rec["block_rows"]
+    assert common.resolve_block_rows("murmur", n=1024) == rec["block_rows"]
+    # override still beats the tuned winner
+    assert common.resolve_block_rows("murmur", 32, n=1024) == 32
+
+
+def test_nearest_bucket_fallback():
+    autotune.sweep_kernel("murmur", n=1024, candidates=(8,), repeats=1, interpret=True)
+    # far-away size: nearest tuned log2 bucket still informs the call
+    assert autotune.cached_block_rows("murmur", n=1 << 22) == 8
+    # different kernel/width: no bleed-through
+    assert autotune.cached_block_rows("csr_gather", n=1024) is None
+    assert autotune.cached_block_rows("murmur", n=None) is None
+
+
+def test_full_grid_sweep_runs():
+    """One cell per kernel (× width for the gathers) sweeps clean."""
+    recs = autotune.autotune(
+        sizes=(512,), widths=(1, 2), candidates=(8,), repeats=1, interpret=True
+    )
+    assert len(recs) == 3 + 2 * 2  # 3 single-width kernels + 2 gathers × 2 widths
+    assert all(r["block_rows"] == 8 for r in recs)
+
+
+def test_json_cache_round_trip(tmp_path, monkeypatch):
+    """save → clear → load restores winners; REPRO_AUTOTUNE_CACHE names the path."""
+    path = tmp_path / "autotune_cache.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+
+    rec = autotune.sweep_kernel(
+        "csr_gather", n=2048, width=2, candidates=(1, 8), repeats=1, interpret=True
+    )
+    assert autotune.save_cache() == str(path)
+    blob = json.loads(path.read_text())
+    assert blob["version"] == 1
+    assert blob["entries"][rec["key"]]["block_rows"] == rec["block_rows"]
+
+    autotune.clear_cache()
+    assert common.resolve_block_rows("csr_gather", n=2048, width=2) == 8  # default
+    assert autotune.load_cache() == 1
+    assert (
+        common.resolve_block_rows("csr_gather", n=2048, width=2) == rec["block_rows"]
+    )
+    # missing file is a no-op load, not an error
+    autotune.clear_cache()
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "absent.json"))
+    assert autotune.load_cache() == 0
+
+
+def test_tuned_shapes_compile_and_match_defaults():
+    """Ops called with block_rows=None under a tuned cache return exactly
+    what an explicit block_rows produces — resolution happens outside jit,
+    so the tuned integer lands in the same compiled program."""
+    rng = np.random.default_rng(7)
+    keys = jnp.asarray(rng.integers(0, 1 << 32, 700, dtype=np.uint32))
+    starts = jnp.arange(64, dtype=jnp.int32) * 4
+    counts = jnp.full((64,), 4, jnp.int32)
+    table = jnp.asarray(rng.integers(0, 1 << 31, 256, dtype=np.int32))
+
+    baseline_h = ops.hash_to_buckets(keys, 97, interpret=True)
+    baseline_g = ops.csr_gather(starts, counts, table, capacity=256, interpret=True)
+
+    # force a non-default winner for both kernels' buckets
+    for kernel, n in [("murmur", 700), ("csr_gather", 256)]:
+        autotune.sweep_kernel(kernel, n=n, candidates=(2,), repeats=1, interpret=True)
+    assert common.resolve_block_rows("murmur", n=700) == 2
+
+    tuned_h = ops.hash_to_buckets(keys, 97, interpret=True)
+    np.testing.assert_array_equal(np.asarray(tuned_h), np.asarray(baseline_h))
+    tuned_g = ops.csr_gather(starts, counts, table, capacity=256, interpret=True)
+    for a, b in zip(tuned_g, baseline_g):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
