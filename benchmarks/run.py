@@ -44,6 +44,9 @@ BENCHES = [
     # async front end: open-loop Poisson arrivals through the AOT-warmed
     # server — p50/p99/p999 + goodput per offered rate
     ("benchmarks.bench_serve", ["--keys", "32768", "--open-loop"], 8),
+    # KV-cache subsystem: YCSB A–F mixed workloads through the AOT-warmed
+    # upsert/TTL serving stack — throughput + read p50/p99 per letter
+    ("benchmarks.bench_ycsb", ["--keys", "8192"], 8),
     # §5 SOTA comparison
     ("benchmarks.bench_sota_table", ["--keys", "262144"], 8),
     # framework extra: LM step cost

@@ -1,0 +1,29 @@
+"""KV-cache subsystem — serving-cache semantics over the versioned table.
+
+The memcached/online-cache scenario on top of ``repro.core``: upsert
+(insert-or-replace) resolved through the delta/tombstone machinery,
+per-row TTLs on the state's logical clock, policy-driven eviction that
+actually reclaims capacity, and a YCSB-style mixed-workload generator to
+drive it all through the serving stack.
+
+* :class:`KVCache` — the eager cache facade (put/get/delete/advance/
+  maintain) over one ``TableState``.
+* :mod:`repro.cache.workload` — zipfian YCSB-A–F op-stream generators.
+"""
+from repro.cache.kvcache import KVCache
+from repro.cache.workload import (
+    WORKLOADS,
+    WorkloadSpec,
+    YCSBWorkload,
+    ZipfianGenerator,
+    key_of,
+)
+
+__all__ = [
+    "KVCache",
+    "WORKLOADS",
+    "WorkloadSpec",
+    "YCSBWorkload",
+    "ZipfianGenerator",
+    "key_of",
+]

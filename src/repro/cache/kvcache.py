@@ -1,0 +1,210 @@
+"""KVCache — an eager KV-cache facade over the versioned distributed table.
+
+The table core is a *multiset* (insert adds occurrences); a cache wants a
+*map* with lifetimes.  This facade closes the gap with the three pieces
+the core already grew for it:
+
+* **put** is ``DistributedHashTable.upsert`` — prior versions tombstoned
+  at the current epoch, the new row in a fresh delta, so every read
+  resolves the newest value through the same fused 2-all-to-all plan as a
+  plain query (no read-path branching for cache semantics).
+* **TTL** rides the tombstone ``expires`` lane against the state's
+  logical clock: ``advance(now)`` is O(1) and purely functional; expiry
+  is resolved at read time, so a row ages out of *every* snapshot that
+  advances past its deadline.
+* **Eviction** is the :class:`~repro.core.maintenance.CompactionPolicy`
+  eviction trigger: expired rows are invisible the moment the clock
+  passes them, but their capacity is only returned by a fold/compact —
+  :meth:`maintain` runs the policy (stats-driven cold-first folds,
+  escalation to the live-count-sized full rebuild under expired/tombstone
+  pressure) so a steady upsert+expire stream holds live capacity flat.
+
+Eager/host-driven by design (each call syncs a few scalars): this is the
+single-process counterpart of the ``repro.serve_table`` server, which
+applies the same ops through its shadow-state writer loop for
+snapshot-swapped concurrent serving.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import maintenance, plans
+from repro.core.hashgraph import EMPTY_KEY
+from repro.core.maintenance import CompactionPolicy
+from repro.core.state import TableState
+from repro.core.table import DistributedHashTable, retrieval_to_lists
+
+
+class KVCache:
+    """Insert-or-replace cache with TTL/eviction over one ``TableState``.
+
+    ``table`` owns the mesh and jitted executors; ``keys``/``values``
+    (optional) pre-load the cache through one bulk build.  ``default_ttl``
+    applies to every :meth:`put` that does not pass its own; ``policy``
+    defaults to stats-driven folds (``fold_k=None``), ring-full folding,
+    and the eviction escalation at 25% expired tombstone load.
+
+    All methods are eager (host-driven); the state is functional
+    underneath, so :attr:`state` at any moment is an immutable snapshot
+    that stays valid across later mutations.
+    """
+
+    def __init__(
+        self,
+        table: DistributedHashTable,
+        keys=None,
+        values=None,
+        *,
+        default_ttl: Optional[int] = None,
+        policy: Optional[CompactionPolicy] = None,
+    ):
+        self.table = table
+        self.default_ttl = default_ttl
+        self.policy = policy or CompactionPolicy(
+            max_delta_depth=table.max_deltas,
+            fold_k=None,
+            expired_load=0.25,
+        )
+        if keys is None:
+            # Empty cache: a base of EMPTY sentinel rows (zero live keys).
+            n = 8 * table.num_devices
+            keys = np.full(
+                (n,) if table.schema.key_lanes == 1 else (n, table.schema.key_lanes),
+                EMPTY_KEY,
+                np.uint32,
+            )
+            values = np.full((n,), -1, np.int32)
+            if table.schema.value_cols > 1:
+                values = np.stack([values] * table.schema.value_cols, axis=1)
+        self.state: TableState = table.init(keys, values)
+        self.evictions = 0  # full compacts run by maintain()
+        self.folds = 0  # incremental folds run by maintain()
+
+    # -- clock ---------------------------------------------------------------
+    @property
+    def now(self) -> int:
+        """The logical clock TTLs expire against."""
+        return int(self.state.now)
+
+    def advance(self, now: int) -> None:
+        """Advance the logical clock (monotone); expiry is read-resolved."""
+        self.state = self.state.advance(now)
+
+    def tick(self, dt: int = 1) -> None:
+        """Advance the clock by ``dt``."""
+        self.advance(self.now + int(dt))
+
+    # -- writes --------------------------------------------------------------
+    def put(self, keys, values=None, *, ttl: Optional[int] = None) -> None:
+        """Insert-or-replace ``keys`` -> ``values``; optional per-call TTL.
+
+        Runs the compaction policy first (the server's per-op discipline:
+        neither the delta ring nor the tombstone buffer can overflow
+        mid-stream while the policy triggers are on), then one
+        ``table.upsert``.  ``ttl=None`` falls back to ``default_ttl``;
+        pass ``ttl=0`` for an immediately-expired (inert) write.
+        """
+        stats = self.state.stats()
+        if self.policy.due(stats):
+            self.maintain(stats=stats, force=True)
+        if ttl is None:
+            ttl = self.default_ttl
+        self.state = self.table.upsert(self.state, keys, values, ttl=ttl)
+
+    def delete(self, keys) -> None:
+        """Drop ``keys`` from every later read (tombstoned immediately)."""
+        stats = self.state.stats()
+        if self.policy.due(stats):
+            self.maintain(stats=stats, force=True)
+        self.state = self.table.delete(self.state, keys)
+
+    # -- reads ---------------------------------------------------------------
+    def _pad_queries(self, keys) -> tuple[jnp.ndarray, int]:
+        q = self.table.schema.pack_keys(keys)
+        n = q.shape[0]
+        pad = (-n) % self.table.num_devices
+        if pad:
+            q = jnp.concatenate(
+                [q, jnp.full((pad,) + q.shape[1:], EMPTY_KEY, jnp.uint32)]
+            )
+        return q, n
+
+    def contains(self, keys) -> np.ndarray:
+        """Boolean per key: live (unexpired) entry present?"""
+        q, n = self._pad_queries(keys)
+        return np.asarray(self.table.query(self.state, q))[:n] > 0
+
+    def get(self, keys, *, fill: int = -1) -> np.ndarray:
+        """Current value per key; ``fill`` where missing or expired.
+
+        Returns ``(N,)`` int32 for 1-column schemas, ``(N, C)`` otherwise.
+        Under the KV discipline every present key has exactly one live
+        row, so the per-key value list is its single element.
+        """
+        q, n = self._pad_queries(keys)
+        res = self.table.retrieve(self.state, q)
+        per_key = retrieval_to_lists(res)[:n]
+        cols = self.table.schema.value_cols
+        out = np.full((n,) if cols == 1 else (n, cols), fill, np.int32)
+        for i, vals in enumerate(per_key):
+            if len(vals):
+                out[i] = vals[0]
+        return out
+
+    # -- maintenance / eviction ----------------------------------------------
+    def live_count(self) -> int:
+        """Global live (visible at the current clock) row count."""
+        return int(plans.exec_live_count(self.table, self.state))
+
+    def stats(self):
+        """The underlying ``TableStats`` (includes ``tombstone_expired``)."""
+        return self.state.stats()
+
+    def maintain(self, *, stats=None, force: bool = False) -> bool:
+        """Run one policy-driven fold/evict pass; True iff anything ran.
+
+        Escalations (tombstone pressure, dropped rows, the ``expired_load``
+        eviction trigger) run the full live-count-sized ``compact()`` —
+        the pass that returns expired/superseded capacity.  Otherwise a
+        stats-driven ``fold_oldest`` merges the cold prefix.  ``force``
+        skips the ``due`` check (the ``put`` path pre-checked it).
+        """
+        if stats is None:
+            stats = self.state.stats()
+        if not force and not self.policy.due(stats):
+            return False
+        escalate = self.policy.escalates(stats)
+        if escalate or not self.state.coherent:
+            self.state = self.state.compact()
+            self.evictions += 1
+            return True
+        layer_live = None
+        if self.policy.fold_k is None and stats.delta_depth:
+            layer_live = maintenance.collect_layer_live(self.state)
+        k = self.policy.fold_amount(stats, layer_live)
+        if not k:
+            return False
+        if k >= stats.delta_depth:
+            self.state = self.state.compact()
+            self.evictions += 1
+        else:
+            self.state = maintenance.fold_oldest(self.state, k)
+            self.folds += 1
+        return True
+
+    def evict_expired(self) -> int:
+        """Force a full compact; returns rows reclaimed (allocated delta).
+
+        The explicit eviction pass: expired rows (and superseded versions)
+        are dropped from the rebuilt base, tombstone slots free, and the
+        base arrays re-flatten to the live-count size.
+        """
+        before = self.state.stats()
+        alloc_before = before.base_rows + before.delta_rows
+        self.state = self.state.compact()
+        self.evictions += 1
+        after = self.state.stats()
+        return alloc_before - (after.base_rows + after.delta_rows)

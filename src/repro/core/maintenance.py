@@ -31,6 +31,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import multi_hashgraph, plans
@@ -61,6 +62,7 @@ class TableStats:
     tombstone_capacity: int  # allocated tombstone slots (static)
     tombstone_dropped: int  # deletes lost to tombstone capacity
     num_dropped: int  # total drops across builds + tombstones
+    tombstone_expired: int = 0  # entries already effective at the clock
 
     @property
     def tombstone_load(self) -> float:
@@ -69,10 +71,32 @@ class TableStats:
             return 0.0
         return self.tombstone_count / self.tombstone_capacity
 
+    @property
+    def expired_load(self) -> float:
+        """Expired-entry fill fraction — the TTL-eviction pressure signal.
+
+        Every expired entry names rows that reads already mask but whose
+        slots (table rows + the tombstone slot itself) only a fold/compact
+        reclaims; this is the fraction :class:`CompactionPolicy`'s
+        eviction trigger watches.
+        """
+        if not self.tombstone_capacity:
+            return 0.0
+        return self.tombstone_expired / self.tombstone_capacity
+
 
 def collect_stats(state: TableState) -> TableStats:
     """Read a :class:`TableStats` snapshot off ``state`` (host-syncing)."""
     ts = state.tombstones
+    if ts.capacity:
+        expired = int(
+            np.count_nonzero(
+                (np.asarray(ts.epochs) >= 0)
+                & (int(ts.now) >= np.asarray(ts.expires))
+            )
+        )
+    else:
+        expired = 0
     return TableStats(
         delta_depth=len(state.deltas),
         base_rows=int(state.base.local.keys.shape[0]),
@@ -81,7 +105,23 @@ def collect_stats(state: TableState) -> TableStats:
         tombstone_capacity=ts.capacity,
         tombstone_dropped=int(ts.num_dropped),
         num_dropped=int(state.num_dropped),
+        tombstone_expired=expired,
     )
+
+
+def collect_layer_live(state: TableState) -> tuple:
+    """Per-layer ``(live_rows, allocated_rows)`` pairs, base first.
+
+    One jitted counts round (:func:`repro.core.plans.exec_layer_live`) —
+    the signal behind stats-driven fold sizing (``fold_k=None``): a delta
+    whose live fraction has decayed (rows superseded by upserts, deleted,
+    or TTL-expired) is *cold* and folds away almost for free, so the
+    policy folds the longest cold prefix first.  Host-syncing; call
+    eagerly between batches, never inside ``jax.jit``.
+    """
+    live = [int(x) for x in plans.exec_layer_live(state.table, state)]
+    alloc = [int(layer.local.keys.shape[0]) for layer in state.layers]
+    return tuple(zip(live, alloc))
 
 
 # ---------------------------------------------------------------------------
@@ -104,14 +144,32 @@ class CompactionPolicy:
     * ``max_dropped`` — fold when total dropped rows exceed this
       (``None`` disables).
     * ``fold_k`` — how many of the oldest deltas an incremental
-      maintenance pass merges (:func:`fold_oldest`'s ``k``).
+      maintenance pass merges (:func:`fold_oldest`'s ``k``).  ``None``
+      selects **stats-driven** sizing: the caller passes the per-layer
+      live-row measurement (:func:`collect_layer_live`) to
+      :meth:`fold_amount`, which folds the longest prefix of *cold*
+      deltas (live rows at or below ``cold_live_ratio`` of the hottest
+      delta's) — cold layers are mostly superseded/expired rows, so
+      folding them first reclaims the most capacity per unit of fold
+      pause.
+    * ``cold_live_ratio`` — fraction of the hottest delta's live count
+      at or below which a delta counts as cold for the stats-driven fold
+      (``fold_k=None``).
+    * ``expired_load`` — TTL-eviction trigger: escalate to a full compact
+      when the fraction of tombstone entries already *expired* (effective
+      at the clock — rows reads mask but whose capacity is still held)
+      reaches this value.  ``None`` disables; irrelevant without TTLs
+      (plain deletes also count as expired entries, but the plain
+      ``tombstone_load`` trigger fires first at the default settings).
     """
 
     max_delta_depth: Optional[int] = None
     tombstone_load: float = 0.5
     tombstone_overflow: bool = True
     max_dropped: Optional[int] = None
-    fold_k: int = 2
+    fold_k: Optional[int] = 2
+    cold_live_ratio: float = 0.5
+    expired_load: Optional[float] = None
 
     def due(self, stats: TableStats) -> bool:
         """Is a state with these stats due for compaction?"""
@@ -129,7 +187,10 @@ class CompactionPolicy:
         free tombstones with epochs inside the folded prefix and *carry*
         the folded layers' drop tally into the new base, so both pressures
         want the full rebuild — and that holds even at delta depth 0
-        (tombstones and drops fold away only through ``compact()``).
+        (tombstones and drops fold away only through ``compact()``).  The
+        ``expired_load`` eviction trigger escalates for the same reason:
+        only the live-count-sized full rebuild returns the capacity that
+        expired rows hold.
         """
         if self.tombstone_overflow and stats.tombstone_dropped > 0:
             return True
@@ -138,20 +199,55 @@ class CompactionPolicy:
             and stats.tombstone_load >= self.tombstone_load
         ):
             return True
+        if (
+            self.expired_load is not None
+            and stats.tombstone_capacity
+            and stats.expired_load >= self.expired_load
+        ):
+            return True
         return self.max_dropped is not None and stats.num_dropped > self.max_dropped
 
-    def fold_amount(self, stats: TableStats) -> int:
+    def fold_amount(self, stats: TableStats, layer_live=None) -> int:
         """How many oldest layers to fold for a state with these stats.
 
         Incremental (``fold_k``) by default; :meth:`escalates` promotes to
         every delta (callers run the full ``compact()`` there, which also
         handles the depth-0 tombstone-only case an oldest-k fold cannot).
+
+        With ``fold_k=None`` the size is derived from ``layer_live`` (the
+        :func:`collect_layer_live` measurement, base first): fold the
+        longest prefix of deltas that are *cold* — live rows at or below
+        ``cold_live_ratio`` of the hottest delta's live count.  Coldness
+        is relative to the stack's peak, not to allocated rows: allocation
+        carries the capacity slack and lane rounding, so even a fully-live
+        delta sits well under 1.0 of its allocation, while peak-relative
+        comparison is scale- and slack-free (an all-dead stack folds
+        entirely, a uniformly-hot stack folds the minimum).  Always at
+        least one delta, so a due fold makes progress even when every
+        delta is hot.  Without a measurement the stats-driven mode
+        degrades to a minimal fold of 1.
         """
         if self.escalates(stats):
             return stats.delta_depth
         if not stats.delta_depth:
             return 0
-        return min(max(1, self.fold_k), stats.delta_depth)
+        if self.fold_k is not None:
+            return min(max(1, self.fold_k), stats.delta_depth)
+        k = 1
+        if layer_live is not None:
+            # layer_live[0] is the base; deltas start at index 1.  Extend
+            # the folded prefix while the next-oldest delta is cold.
+            deltas = layer_live[1:]
+            peak = max((live for live, _ in deltas), default=0)
+            if peak == 0:
+                k = len(deltas)  # nothing live anywhere: fold them all
+            else:
+                for j, (live, _alloc) in enumerate(deltas, start=1):
+                    if live <= self.cold_live_ratio * peak:
+                        k = j
+                    else:
+                        break
+        return min(max(1, k), stats.delta_depth)
 
 
 # ---------------------------------------------------------------------------
@@ -164,23 +260,33 @@ def _remap_tombstones(ts: Tombstones, k: int) -> Tombstones:
 
     A tombstone with epoch ``e`` hides layers ``0..e``.  After the fold,
     layers ``0..k`` are one new base with the masking already applied:
-    tombstones with ``e <= k`` are spent (and MUST be discarded — kept,
-    they would wrongly hide folded rows of later epochs), tombstones with
-    ``e > k`` keep hiding the surviving deltas at ``e - k``.  Survivors are
-    repacked to the front so ``push`` keeps appending densely; the
-    overflow tally is preserved (lost deletes stay lost until a caller
-    decides to trust a full rebuild).  Pure and traceable.
+    *effective* tombstones with ``e <= k`` are spent (and MUST be
+    discarded — kept, they would wrongly hide folded rows of later
+    epochs), tombstones with ``e > k`` keep hiding the surviving deltas
+    at ``e - k``.  TTL entries still **pending** at the current clock
+    (``now < expires``) were NOT applied by the fold (they masked
+    nothing — ``index()`` resolves them to epoch ``-1``), so they must
+    survive regardless of their stamped epoch: a pending entry with
+    ``e <= k`` now guards rows living in the folded base and is clamped
+    to epoch ``0``.  Survivors are repacked to the front so ``push``
+    keeps appending densely; the overflow tally and the clock are
+    preserved (lost deletes stay lost until a caller decides to trust a
+    full rebuild).  Pure and traceable.
     """
-    keep = ts.epochs > k
+    spent = ts.now >= ts.expires  # effective (delete or expired TTL)
+    keep = (ts.epochs > k) | ((ts.epochs >= 0) & ~spent)
     order = jnp.argsort(~keep, stable=True)  # survivors first
     kept = keep[order]
     keys = ts.keys[order]
     kept_b = kept[:, None] if keys.ndim == 2 else kept
+    new_epochs = jnp.maximum(ts.epochs[order] - k, jnp.int32(0))
     return Tombstones(
         keys=jnp.where(kept_b, keys, jnp.uint32(EMPTY_KEY)),
-        epochs=jnp.where(kept, ts.epochs[order] - k, jnp.int32(-1)),
+        epochs=jnp.where(kept, new_epochs, jnp.int32(-1)),
+        expires=jnp.where(kept, ts.expires[order], jnp.int32(0)),
         count=jnp.sum(keep).astype(jnp.int32),
         num_dropped=ts.num_dropped,
+        now=ts.now,
     )
 
 
@@ -205,7 +311,10 @@ def exec_fold(table, state: TableState, *, k: int):
         in_specs=(plans.state_specs(state),),
         out_specs=(
             plans.dhg_specs(state.base),
-            Tombstones(keys=P(), epochs=P(), count=P(), num_dropped=P()),
+            Tombstones(
+                keys=P(), epochs=P(), expires=P(),
+                count=P(), num_dropped=P(), now=P(),
+            ),
         ),
         check_vma=False,
     )(state)

@@ -123,6 +123,7 @@ def build_sharded(
     local_range_cap: Optional[int] = None,
     bucket_stride: int = 1,
     fingerprint: Optional[bool] = None,
+    dest_offsets: Optional[jax.Array] = None,
 ) -> DistributedHashGraph:
     """Build the distributed HashGraph from this device's local ``keys``.
 
@@ -146,6 +147,15 @@ def build_sharded(
     :func:`repro.core.hashgraph.build_from_buckets`); the fingerprints are
     derived owner-side from the routed keys, so the exchange itself is
     unchanged.  Call inside ``shard_map``.
+
+    ``dest_offsets`` (hot-key replication) shifts each row's destination by
+    a per-row device offset — ``(hash owner + offset) % D`` — so a single
+    hot key's rows spread across ``R`` owners instead of funnelling into
+    one device's dispatch slot.  Off-owner rows land in the receiving
+    device's *clamped* bucket (``_rebase_buckets`` clips out-of-range
+    buckets), where the exact key compare of every probe path still finds
+    them; readers recover the full count by summing query rounds routed
+    with each ``dest_offset`` (see ``query_sharded``).
     """
     axis_names = tuple(axis_names)
     keys = keys.astype(jnp.uint32)
@@ -171,6 +181,8 @@ def build_sharded(
 
     # ---- Phase 2: reorganization ------------------------------------------
     dest = partition.destination_of(h, splits)
+    if dest_offsets is not None:
+        dest = (dest + dest_offsets.astype(jnp.int32)) % num_devices
     # Sentinels route round-robin (all EMPTY rows hash identically — sending
     # them by hash would funnel every one to a single owner's slot).
     dest = jnp.where(
@@ -219,7 +231,10 @@ def build_sharded(
 
 
 def _route_queries_once(
-    dhg: DistributedHashGraph, queries: jax.Array, capacity_slack: float
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    capacity_slack: float,
+    dest_offset: int = 0,
 ) -> tuple[jax.Array, exchange.Route, jax.Array, jax.Array, jax.Array, int]:
     """The one exchange round of the query hot path (paper §3.3 phase 1).
 
@@ -228,6 +243,14 @@ def _route_queries_once(
     single round serves every layer: the owner-side hash of the received
     keys is layer-independent (same hash range and seed), and each layer
     rebases it into its own bucket space via :func:`_rebase_buckets`.
+
+    ``dest_offset`` (static) routes every query ``r`` devices past its hash
+    owner — the read side of hot-key replication (``build_sharded``'s
+    ``dest_offsets``): replica ``r`` of a hot key lives on device
+    ``(owner + r) % D``, and a non-replicated key simply counts 0 there
+    (the exact key compare finds nothing), so summing rounds over
+    ``r = 0..R-1`` merges replica counts exactly.  The default 0 is guarded
+    to keep the hot path's jaxpr byte-identical.
 
     Returns ``(rq, route, rh, is_pad, lo, capacity)`` — received queries
     (EMPTY-padded), the reverse route, their owner-side hash values, the
@@ -240,6 +263,8 @@ def _route_queries_once(
 
     h = hashing.hash_to_buckets(queries, dhg.hash_range, seed=dhg.seed)
     dest = partition.destination_of(h, dhg.hash_splits)
+    if dest_offset:
+        dest = (dest + jnp.int32(dest_offset)) % num_devices
     capacity = default_capacity(queries.shape[0], num_devices, capacity_slack)
     (rq,), route = exchange.dispatch(
         (queries,), dest, axis_names, capacity, fills=(jnp.uint32(EMPTY_KEY),)
@@ -251,7 +276,10 @@ def _route_queries_once(
 
 
 def _route_queries(
-    dhg: DistributedHashGraph, queries: jax.Array, capacity_slack: float
+    dhg: DistributedHashGraph,
+    queries: jax.Array,
+    capacity_slack: float,
+    dest_offset: int = 0,
 ) -> tuple[jax.Array, exchange.Route, jax.Array, int]:
     """Single-graph routing preamble: :func:`_route_queries_once` plus this
     graph's own bucket rebase.
@@ -262,7 +290,7 @@ def _route_queries(
     retrieval.  Returns ``(rq, route, rbuckets, capacity)``.
     """
     rq, route, rh, is_pad, lo, capacity = _route_queries_once(
-        dhg, queries, capacity_slack
+        dhg, queries, capacity_slack, dest_offset
     )
     rbuckets = _rebase_buckets(
         rh, is_pad, lo, dhg.local_range_cap, dhg.bucket_stride
@@ -337,6 +365,7 @@ def query_sharded(
     max_probe: int = 64,
     tombstones: Optional[tuple[jax.Array, jax.Array]] = None,
     layer_epoch: int = 0,
+    dest_offset: int = 0,
 ) -> jax.Array:
     """Multiplicity of each local query key in the distributed table.
 
@@ -344,10 +373,14 @@ def query_sharded(
     *build* splits, count against the local shard, route counts back.
     ``tombstones`` (the sorted ``Tombstones.index()`` pair) / ``layer_epoch``
     mask rows deleted from this layer of a versioned table (see
-    :func:`_mask_counts`).  Returns an int32 array aligned with ``queries``.
+    :func:`_mask_counts`).  ``dest_offset`` counts replica ``r`` of
+    hot-key-replicated rows (see :func:`_route_queries_once`).  Returns an
+    int32 array aligned with ``queries``.
     """
     axis_names = dhg.axis_names
-    rq, route, rbuckets, _ = _route_queries(dhg, queries, capacity_slack)
+    rq, route, rbuckets, _ = _route_queries(
+        dhg, queries, capacity_slack, dest_offset
+    )
     if paper_faithful_probe:
         counts = hashgraph.query_count_probe(
             dhg.local, rq, max_probe=max_probe, buckets=rbuckets
@@ -368,6 +401,7 @@ def query_layers_sharded(
     capacity_slack: float = 1.25,
     paper_faithful_probe: bool = False,
     max_probe: int = 64,
+    dest_offset: int = 0,
 ) -> jax.Array:
     """Merged multiplicity over a versioned stack of layers.
 
@@ -396,11 +430,14 @@ def query_layers_sharded(
                 capacity_slack=capacity_slack,
                 paper_faithful_probe=paper_faithful_probe,
                 max_probe=max_probe,
+                dest_offset=dest_offset,
             )
         return total
 
     base = layers[0]
-    rq, route, rh, is_pad, lo, _ = _route_queries_once(base, queries, capacity_slack)
+    rq, route, rh, is_pad, lo, _ = _route_queries_once(
+        base, queries, capacity_slack, dest_offset
+    )
     match_e = _tombstone_epochs(rq, tombstones)
     rfp = _routed_fingerprints(layers, rq)
     total = jnp.zeros(rq.shape[0], jnp.int32)

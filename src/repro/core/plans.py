@@ -84,7 +84,14 @@ def state_specs(state: TableState) -> TableState:
     return TableState(
         base=dhg_specs(state.base),
         deltas=tuple(dhg_specs(d) for d in state.deltas),
-        tombstones=Tombstones(keys=P(), epochs=P(), count=P(), num_dropped=P()),
+        tombstones=Tombstones(
+            keys=P(),
+            epochs=P(),
+            expires=P(),
+            count=P(),
+            num_dropped=P(),
+            now=P(),
+        ),
         table=state.table,
         coherent=state.coherent,
     )
@@ -111,9 +118,17 @@ def _in_spec(table):
     return P(tuple(table.axis_names))
 
 
-@partial(jax.jit, static_argnums=(0,))
-def exec_query(table, state: TableState, queries: jax.Array) -> jax.Array:
-    """Merged multiplicity per query over base + deltas − tombstones."""
+@partial(jax.jit, static_argnums=(0,), static_argnames=("dest_offset",))
+def exec_query(
+    table, state: TableState, queries: jax.Array, *, dest_offset: int = 0
+) -> jax.Array:
+    """Merged multiplicity per query over base + deltas − tombstones.
+
+    ``dest_offset`` (static, default 0 — the guarded hot path) counts
+    replica ``r`` of hot-key-replicated rows; ``table.query`` sums rounds
+    over ``r = 0..R-1`` to merge replica counts (non-replicated keys count
+    0 on every round but the first).
+    """
 
     def body(st, q):
         return multi_hashgraph.query_layers_sharded(
@@ -124,6 +139,7 @@ def exec_query(table, state: TableState, queries: jax.Array) -> jax.Array:
             capacity_slack=table.capacity_slack,
             paper_faithful_probe=table.paper_faithful_probe,
             max_probe=table.max_probe,
+            dest_offset=dest_offset,
         )
 
     return shard_map(
@@ -293,6 +309,39 @@ def exec_live_count(table, state: TableState) -> jax.Array:
                 dead = dead | (match_epochs_sorted(k, ts_keys, ts_epochs) >= epoch)
             live = live + jnp.sum(~dead).astype(jnp.int32)
         return jax.lax.psum(live, tuple(table.axis_names))
+
+    return shard_map(
+        body,
+        mesh=table.mesh,
+        in_specs=(state_specs(state),),
+        out_specs=P(),
+        check_vma=False,
+    )(state)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def exec_layer_live(table, state: TableState) -> jax.Array:
+    """Per-layer global live row counts: replicated ``(num_layers,)`` int32.
+
+    The per-layer breakdown of :func:`exec_live_count` (same masking, not
+    summed across layers), feeding stats-driven fold scheduling: a delta
+    whose live fraction has collapsed is cold — mostly superseded or
+    expired rows — and is the cheapest capacity to reclaim with
+    ``fold_oldest``.  Index 0 is the base; index ``i>0`` is delta ``i-1``.
+    """
+
+    def body(st):
+        from repro.core.hashgraph import is_empty_key, match_epochs_sorted
+
+        ts_keys, ts_epochs = st.tombstones.index()
+        per_layer = []
+        for epoch, layer in enumerate(st.layers):
+            k = layer.local.keys
+            dead = is_empty_key(k)
+            if ts_keys.shape[0]:
+                dead = dead | (match_epochs_sorted(k, ts_keys, ts_epochs) >= epoch)
+            per_layer.append(jnp.sum(~dead).astype(jnp.int32))
+        return jax.lax.psum(jnp.stack(per_layer), tuple(table.axis_names))
 
     return shard_map(
         body,

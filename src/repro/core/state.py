@@ -13,6 +13,16 @@ mutable-by-value table in the LSM style:
   ``<= e`` (everything that existed at delete time) and leaves later
   inserts visible — so delete-then-reinsert behaves like a real table.
 
+  Each entry additionally carries an ``expires`` stamp against the state's
+  logical clock ``now`` (KV-cache TTL semantics): a plain delete expires at
+  0 (always in the past — it masks immediately), while an entry pushed with
+  ``expires = now + ttl`` is *pending* — invisible to reads until the clock
+  reaches it, at which point it behaves exactly like a delete issued at its
+  epoch.  Expiry is resolved inside :meth:`Tombstones.index` (entries not
+  yet expired sort with epoch ``-1``), so every masking path — query,
+  retrieve, fold, compact, live-count sizing — honours TTLs with zero
+  changes to its collective structure.
+
 ``TableState`` is a pytree: ``insert``/``delete`` return a *new* state (the
 old one stays valid), and every operation is traceable under an outer
 ``jax.jit`` — the delta count and tombstone capacity are static structure.
@@ -40,49 +50,87 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
     from repro.core.table import DistributedHashTable
 
 
+# Expiry stamp meaning "never": larger than any reachable logical clock.
+NEVER_EXPIRES = 0x7FFFFFFF
+
+
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("keys", "epochs", "count", "num_dropped"),
+    data_fields=("keys", "epochs", "expires", "count", "num_dropped", "now"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
 class Tombstones:
-    """Fixed-capacity delete buffer, replicated on every device.
+    """Fixed-capacity delete/TTL buffer, replicated on every device.
 
     Unused slots hold the EMPTY sentinel with epoch ``-1`` (matched by
-    nothing).  ``num_dropped`` counts deletes that overflowed the buffer —
-    reported, never silent, same contract as every other static capacity in
-    the stack.
+    nothing).  ``expires`` stamps each entry against the logical clock
+    ``now``: a plain delete expires at 0 (effective immediately), a TTL
+    entry at ``now + ttl`` (pending until the clock reaches it).
+    ``num_dropped`` counts deletes that overflowed the buffer — reported,
+    never silent, same contract as every other static capacity in the
+    stack.
     """
 
     keys: jax.Array  # (T,) uint32 or (T, L) packed lanes
     epochs: jax.Array  # (T,) int32, -1 in unused slots
+    expires: jax.Array  # (T,) int32 — logical time the entry takes effect
     count: jax.Array  # () int32 — used slots
     num_dropped: jax.Array  # () int32 — deletes lost to capacity
+    now: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.int32(0)
+    )  # () int32 — the state's logical clock
 
     @property
     def capacity(self) -> int:
         return int(self.keys.shape[0])
 
-    def epoch_of(self, keys: jax.Array) -> jax.Array:
-        """Newest tombstone epoch matching each key (-1 where none)."""
-        return match_epochs(keys, self.keys, self.epochs)
+    def effective_epochs(self) -> jax.Array:
+        """Per-entry masking epoch at the current clock.
 
-    def push(self, keys: jax.Array, epoch: int) -> "Tombstones":
-        """Append ``keys`` stamped with ``epoch``; overflow is counted."""
+        An entry masks nothing until it expires: pending entries (``now <
+        expires``) report epoch ``-1`` (matched by no layer), expired ones
+        their stamped epoch.  This is the *only* place expiry is resolved —
+        everything downstream consumes effective epochs and needs no TTL
+        awareness.
+        """
+        return jnp.where(self.now >= self.expires, self.epochs, jnp.int32(-1))
+
+    def epoch_of(self, keys: jax.Array) -> jax.Array:
+        """Newest effective tombstone epoch matching each key (-1: none)."""
+        return match_epochs(keys, self.keys, self.effective_epochs())
+
+    def push(
+        self, keys: jax.Array, epoch: int, expires: Optional[jax.Array] = None
+    ) -> "Tombstones":
+        """Append ``keys`` stamped with ``epoch``; overflow is counted.
+
+        ``expires`` defaults to 0 — an immediately-effective delete (the
+        clock never goes negative).  Pass ``now + ttl`` for a pending TTL
+        entry, or :data:`NEVER_EXPIRES` to park an inert entry.
+        """
         n = keys.shape[0]
         idx = self.count + jnp.arange(n, dtype=jnp.int32)
         overflow = jnp.maximum(self.count + n - self.capacity, 0)
+        if expires is None:
+            expires = jnp.int32(0)
+        exp = jnp.broadcast_to(jnp.asarray(expires, jnp.int32), (n,))
         return Tombstones(
             keys=self.keys.at[idx].set(keys, mode="drop"),
             epochs=self.epochs.at[idx].set(jnp.int32(epoch), mode="drop"),
+            expires=self.expires.at[idx].set(exp, mode="drop"),
             count=jnp.minimum(self.count + n, self.capacity).astype(jnp.int32),
             num_dropped=(self.num_dropped + overflow).astype(jnp.int32),
+            now=self.now,
         )
 
+    def at_time(self, now) -> "Tombstones":
+        """The same buffer with the logical clock advanced to ``now``."""
+        return dataclasses.replace(self, now=jnp.asarray(now, jnp.int32))
+
     def as_mask_args(self) -> tuple[jax.Array, jax.Array]:
-        """The raw ``(ts_keys, ts_epochs)`` pair (push/insertion order)."""
-        return self.keys, self.epochs
+        """The raw ``(ts_keys, effective_epochs)`` pair (push order)."""
+        return self.keys, self.effective_epochs()
 
     def index(self) -> tuple[jax.Array, jax.Array]:
         """Sorted tombstone index: ``(keys, epochs)`` ordered by key.
@@ -90,21 +138,26 @@ class Tombstones:
         The pair every sharded query/retrieve/plan path takes: lookups
         against it are per-key binary searches
         (:func:`repro.core.hashgraph.match_epochs_sorted`, ``O(log T)``)
-        instead of the O(T) broadcast compare per routed batch.  Pure and
-        traceable — the sort costs ``O(T log T)`` once per operation, with
-        ``T`` the small, bounded tombstone capacity.
+        instead of the O(T) broadcast compare per routed batch.  Epochs are
+        the *effective* ones — pending TTL entries sort with ``-1`` (the
+        front of their key's run), so the run's last entry still carries
+        the newest epoch that actually masks.  Pure and traceable — the
+        sort costs ``O(T log T)`` once per operation, with ``T`` the small,
+        bounded tombstone capacity.
         """
-        return sort_tombstones(self.keys, self.epochs)
+        return sort_tombstones(self.keys, self.effective_epochs())
 
 
-def empty_tombstones(capacity: int, key_lanes: int = 1) -> Tombstones:
+def empty_tombstones(capacity: int, key_lanes: int = 1, now=0) -> Tombstones:
     """An all-empty tombstone buffer for the given schema width."""
     shape = (capacity,) if key_lanes == 1 else (capacity, key_lanes)
     return Tombstones(
         keys=jnp.full(shape, EMPTY_KEY, jnp.uint32),
         epochs=jnp.full((capacity,), -1, jnp.int32),
+        expires=jnp.full((capacity,), NEVER_EXPIRES, jnp.int32),
         count=jnp.int32(0),
         num_dropped=jnp.int32(0),
+        now=jnp.asarray(now, jnp.int32),
     )
 
 
@@ -213,6 +266,28 @@ class TableState:
     def delete(self, keys) -> "TableState":
         """New state with ``keys`` tombstoned at the current epoch."""
         return self.table.delete(self, keys)
+
+    def upsert(self, keys, values=None, *, ttl: Optional[int] = None) -> "TableState":
+        """New state where ``keys`` map to exactly ``values`` (KV semantics).
+
+        Insert-or-replace: prior versions are tombstoned at the current
+        epoch and the new rows land in a fresh delta.  ``ttl`` additionally
+        schedules expiry at ``now + ttl`` on the logical clock.
+        """
+        return self.table.upsert(self, keys, values, ttl=ttl)
+
+    @property
+    def now(self) -> jax.Array:
+        """The state's logical clock (drives TTL expiry)."""
+        return self.tombstones.now
+
+    def advance(self, now) -> "TableState":
+        """New state with the logical clock at ``now`` (monotone by contract).
+
+        Purely functional and O(1): expiry is resolved at read time from
+        the clock, so advancing it is how TTL'd rows age out of view.
+        """
+        return dataclasses.replace(self, tombstones=self.tombstones.at_time(now))
 
     def compact(self, capacity: Optional[int] = None) -> "TableState":
         """Fold deltas + tombstones into a fresh base; reset the ring."""

@@ -119,6 +119,21 @@ class DistributedHashTable:
     dropped rows.  Fallbacks are tallied in ``skew_fallbacks`` (surfaced
     by ``serve_table`` server stats).  Eager inserts only: under an outer
     ``jax.jit`` the histogram cannot be read back, so the guard is skipped.
+
+    ``replicate_hot_keys`` (R > 1 enables) handles the skew no split choice
+    can fix: a batch dominated by ONE key value hashes to one owner, so
+    duplicates beyond the dispatch slot drop no matter how the range is
+    partitioned.  Eager coherent inserts detect such hot keys host-side
+    (occurrence count above the per-(source, dest) dispatch slot) and
+    spread each hot key's rows round-robin over ``min(R, D)`` consecutive
+    owners (``dest_offsets`` in the delta build); detected keys are tallied
+    in the ``hot_keys`` registry and eager ``query`` transparently sums one
+    extra routed round per replica rank to merge the counts (exact for
+    non-replicated keys, which count 0 off their owner).  A full
+    ``compact()`` re-concentrates rows on the hash owner (the rebuild
+    routes purely by hash) — re-detection on the next skewed insert
+    re-spreads them; retrieve/join of replicated rows sees only the
+    ``r = 0`` replica for now (counts are the serving-cache need).
     """
 
     mesh: jax.sharding.Mesh
@@ -138,6 +153,7 @@ class DistributedHashTable:
     fused_routing: Optional[bool] = None
     skew_guard: bool = True
     fingerprint: Optional[bool] = None
+    replicate_hot_keys: int = 0
 
     def __post_init__(self):
         self.axis_names = tuple(self.axis_names)
@@ -163,6 +179,10 @@ class DistributedHashTable:
         # Diagnostics counter (not part of the static jit identity): inserts
         # routed to an incoherent delta by the skew guard.
         self.skew_fallbacks = 0
+        # Hot-key registry: packed key tuple -> replica count R.  Host-side
+        # bookkeeping only (queries read max(R) to size the merge rounds);
+        # not part of the jit identity.
+        self.hot_keys = {}
         # Compact-sizing memo, keyed by state signature (the ExecutorGrid
         # idiom): structurally identical states reuse the derived
         # (capacity, rebuild_rows) pair instead of re-running the
@@ -358,12 +378,89 @@ class DistributedHashTable:
             check_vma=False,
         )(keys, values, splits)
 
-    def _coherent_dispatch_overflows(self, keys: jax.Array, splits) -> bool:
+    @partial(
+        jax.jit, static_argnums=0, static_argnames=("local_cap", "stride", "capacity")
+    )
+    def _build_delta_offsets_jit(
+        self,
+        keys: jax.Array,
+        values: jax.Array,
+        splits: jax.Array,
+        offsets: jax.Array,
+        *,
+        local_cap: int,
+        stride: int,
+        capacity: Optional[int] = None,
+    ):
+        """Hot-key variant of :meth:`_build_delta_jit`: per-row destination
+        offsets spread each hot key's rows over R consecutive owners.  A
+        separate jitted program so the offset-free insert path keeps its
+        jaxpr byte-identical."""
+
+        def body(k, v, sp, offs):
+            return multi_hashgraph.build_sharded(
+                k,
+                hash_range=self.hash_range,
+                axis_names=self.axis_names,
+                values=v,
+                capacity_slack=self.capacity_slack,
+                seed=self.seed,
+                capacity=capacity,
+                hash_splits=sp,
+                local_range_cap=local_cap,
+                bucket_stride=stride,
+                fingerprint=self.use_fingerprint,
+                dest_offsets=offs,
+            )
+
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(self._in_spec(), self._in_spec(), P(), self._in_spec()),
+            out_specs=self._out_specs(local_cap=local_cap, bucket_stride=stride),
+            check_vma=False,
+        )(keys, values, splits, offsets)
+
+    def _hot_key_offsets(self, keys: jax.Array):
+        """Host-side hot-key detection: per-row destination offsets, or None.
+
+        A key is *hot* when its occurrence count in this batch exceeds the
+        per-(source, destination) dispatch slot of the coherent delta build
+        — beyond that, drops are guaranteed if every occurrence funnels to
+        the single hash owner (the failure no split choice fixes).  Hot
+        keys' rows get offsets ``occurrence_rank % R`` so the build spreads
+        them over ``R = min(replicate_hot_keys, D)`` consecutive owners;
+        all other rows keep offset 0.  Detected keys are registered in
+        ``hot_keys`` for the query-side merge.  Eager call sites only.
+        """
+        d = self.num_devices
+        n = keys.shape[0]
+        slot = multi_hashgraph.default_capacity(n // d, d, self.capacity_slack)
+        kn = np.asarray(keys)
+        rows = kn if kn.ndim == 2 else kn[:, None]
+        uniq, inv, counts = np.unique(
+            rows, axis=0, return_inverse=True, return_counts=True
+        )
+        hot = (counts > slot) & ~np.all(uniq == np.uint32(EMPTY_KEY), axis=1)
+        if not np.any(hot):
+            return None
+        r = max(2, min(self.replicate_hot_keys, d))
+        offs = np.zeros(n, np.int32)
+        for u in np.nonzero(hot)[0]:
+            idx = np.nonzero(inv == u)[0]
+            offs[idx] = np.arange(idx.shape[0], dtype=np.int32) % r
+            self.hot_keys[tuple(int(x) for x in uniq[u])] = r
+        return jnp.asarray(offs)
+
+    def _coherent_dispatch_overflows(
+        self, keys: jax.Array, splits, offsets=None
+    ) -> bool:
         """Predict per-(source, destination) slot overflow of a coherent
         delta build for this batch (the delta-dispatch skew check).
 
         Replays the exact routing the frozen-splits build would use — hash,
-        destination by the base's splits, EMPTY sentinels round-robin — and
+        destination by the base's splits (plus the hot-key ``offsets`` when
+        replication spread the batch), EMPTY sentinels round-robin — and
         histograms it per (source shard, destination) pair against the same
         ``default_capacity`` slot size the build would allocate.  The
         histogram and comparison run on device; only the one-boolean
@@ -375,20 +472,27 @@ class DistributedHashTable:
         capacity = multi_hashgraph.default_capacity(
             n_local, d, self.capacity_slack
         )
+        if offsets is None:
+            offsets = jnp.zeros(n, jnp.int32)
         verdict = self._skew_verdict_jit(
-            keys, jnp.asarray(splits), capacity=capacity
+            keys, jnp.asarray(splits), offsets, capacity=capacity
         )
         return bool(verdict)
 
     @partial(jax.jit, static_argnums=0, static_argnames=("capacity",))
     def _skew_verdict_jit(
-        self, keys: jax.Array, splits: jax.Array, *, capacity: int
+        self,
+        keys: jax.Array,
+        splits: jax.Array,
+        offsets: jax.Array,
+        *,
+        capacity: int,
     ) -> jax.Array:
         d = self.num_devices
         n = keys.shape[0]
         n_local = n // d
         h = hashing.hash_to_buckets(keys, self.hash_range, seed=self.seed)
-        dest = partition.destination_of(h, splits)
+        dest = (partition.destination_of(h, splits) + offsets) % d
         rows = jnp.arange(n, dtype=jnp.int32)
         dest = jnp.where(is_empty_key(keys), (rows % n_local) % d, dest)
         pair = (rows // n_local) * d + dest  # (source shard, destination)
@@ -435,13 +539,18 @@ class DistributedHashTable:
         else:
             values = self.schema.pack_values(values)
         coherent_build = self.coherent_deltas
+        tracing = any(
+            isinstance(x, jax.core.Tracer)
+            for x in jax.tree_util.tree_leaves((keys, st.base.hash_splits))
+        )
+        offsets = None
+        if coherent_build and not tracing and self.replicate_hot_keys > 1:
+            # One-key skew no split choice fixes: spread each hot key's
+            # rows over R consecutive owners before the guard re-checks.
+            offsets = self._hot_key_offsets(keys)
         if coherent_build and self.skew_guard:
-            tracing = any(
-                isinstance(x, jax.core.Tracer)
-                for x in jax.tree_util.tree_leaves((keys, st.base.hash_splits))
-            )
             if not tracing and self._coherent_dispatch_overflows(
-                keys, st.base.hash_splits
+                keys, st.base.hash_splits, offsets
             ):
                 # Skewed batch: the frozen-splits dispatch would drop rows.
                 # A legacy-routed delta re-balances its own splits instead.
@@ -449,13 +558,23 @@ class DistributedHashTable:
                 self.skew_fallbacks += 1
         if coherent_build:
             local_cap, stride = self._delta_bucket_geometry(keys.shape[0])
-            delta = self._build_delta_jit(
-                keys,
-                values,
-                st.base.hash_splits,
-                local_cap=local_cap,
-                stride=stride,
-            )
+            if offsets is not None:
+                delta = self._build_delta_offsets_jit(
+                    keys,
+                    values,
+                    st.base.hash_splits,
+                    offsets,
+                    local_cap=local_cap,
+                    stride=stride,
+                )
+            else:
+                delta = self._build_delta_jit(
+                    keys,
+                    values,
+                    st.base.hash_splits,
+                    local_cap=local_cap,
+                    stride=stride,
+                )
             coherent = st.coherent
         else:
             delta = self._build_values_jit(
@@ -489,6 +608,95 @@ class DistributedHashTable:
         return dataclasses.replace(
             st, tombstones=st.tombstones.push(keys, epoch=len(st.deltas))
         )
+
+    def upsert(
+        self,
+        state,
+        keys,
+        values=None,
+        *,
+        ttl: Optional[int] = None,
+        auto_compact: bool = False,
+    ) -> TableState:
+        """Functional insert-or-replace: after it, ``keys`` map to exactly
+        ``values`` (KV semantics over the multiset core).
+
+        One delete + one insert through the existing delta/tombstone
+        machinery: prior versions of every key are tombstoned at the
+        current epoch (hiding layers ``0..d``) and the new rows land in a
+        fresh delta at epoch ``d + 1`` — so reads resolve the newest
+        version with the fused 2-all-to-all budget unchanged, and
+        last-writer-wins / read-your-writes hold by construction.  Within
+        a batch, later occurrences of a duplicate key win (host-side
+        keep-last dedup; under an outer ``jax.jit`` the dedup is skipped —
+        keep traced batches duplicate-free).
+
+        ``ttl`` schedules expiry: a pending tombstone at the *new* epoch
+        with ``expires = now + ttl``, invisible until the logical clock
+        (``state.advance``) reaches it, then masking the upserted row
+        exactly like a delete.  Each upsert refreshes its key's lifetime —
+        the old version's pending entries keep pointing at epochs the
+        delete already hides.
+
+        Unlike :meth:`insert`, ``keys`` need not be device-aligned: the
+        batch is EMPTY-padded to the device multiple (padding rows are
+        routed round-robin and never tombstoned, so they cost no
+        tombstone slots).  ``auto_compact`` mirrors :meth:`insert`.
+        Overflowing ``tombstone_capacity`` is counted in
+        ``state.num_dropped`` — compaction restores exactness.
+        """
+        st = as_state(self, state)
+        if auto_compact and st.should_compact():
+            st = self.compact(st)
+        keys = self.schema.pack_keys(keys)
+        if values is None:
+            if self.schema.value_cols != 1:
+                raise ValueError(
+                    f"schema has {self.schema.value_cols} value columns; "
+                    "pass explicit values (the row-id default is 1-column)"
+                )
+            values = jnp.arange(keys.shape[0], dtype=jnp.int32)
+        else:
+            values = self.schema.pack_values(values)
+        tracing = any(
+            isinstance(x, jax.core.Tracer)
+            for x in jax.tree_util.tree_leaves((keys, values))
+        )
+        if not tracing:
+            # Keep-last dedup: KV semantics demand ONE winner per key per
+            # batch (two surviving rows would both clear the epoch-d
+            # tombstone and double the count).  EMPTY rows drop here too.
+            kn = np.asarray(keys)
+            vn = np.asarray(values)
+            rows = kn if kn.ndim == 2 else kn[:, None]
+            _, first = np.unique(rows[::-1], axis=0, return_index=True)
+            keep = np.sort(rows.shape[0] - 1 - first)
+            keep = keep[~np.all(rows[keep] == np.uint32(EMPTY_KEY), axis=1)]
+            keys = jnp.asarray(kn[keep])
+            values = jnp.asarray(vn[keep])
+        if keys.shape[0] == 0:
+            return st
+        real = keys  # unpadded: tombstoning EMPTY pads would burn slots
+        pad = (-keys.shape[0]) % self.num_devices
+        if pad:
+            keys = jnp.concatenate(
+                [keys, jnp.full((pad,) + keys.shape[1:], EMPTY_KEY, jnp.uint32)]
+            )
+            values = jnp.concatenate(
+                [values, jnp.full((pad,) + values.shape[1:], -1, jnp.int32)]
+            )
+        st = self.delete(st, real)  # hide prior versions: epoch d
+        st = self.insert(st, keys, values)  # the new version: epoch d + 1
+        if ttl is not None:
+            st = dataclasses.replace(
+                st,
+                tombstones=st.tombstones.push(
+                    real,
+                    epoch=len(st.deltas),
+                    expires=st.tombstones.now + jnp.int32(ttl),
+                ),
+            )
+        return st
 
     def compact(self, state, *, capacity: Optional[int] = None) -> TableState:
         """Fold base + deltas − tombstones into a fresh base; reset the ring.
@@ -553,10 +761,38 @@ class DistributedHashTable:
                 ) + _cdiv(n_cat_local, self.num_devices)
         capacity = _cdiv(capacity, 8) * 8
         new_base = self._compact_jit(st, capacity=capacity, rebuild_rows=rebuild_rows)
+        # Tombstone carry: effective entries (deletes + expired TTLs) are
+        # applied by the rebuild and spent, but *pending* TTL entries masked
+        # nothing yet — their rows survive into the new base, so the entries
+        # must survive too (clamped to epoch 0 by the remap).  Eagerly with
+        # nothing pending the buffer resets to the zero-capacity form (reads
+        # pay no masking); traced compacts keep the capacity-preserving
+        # remap — shape-stable, and correct either way.
+        ts = st.tombstones
+        lanes = self.schema.key_lanes
+        if ts.capacity == 0:
+            new_ts = empty_tombstones(0, lanes, now=ts.now)
+        else:
+            ts_tracing = any(
+                isinstance(x, jax.core.Tracer)
+                for x in jax.tree_util.tree_leaves(ts)
+            )
+            pending = ts_tracing or bool(
+                np.any(
+                    (np.asarray(ts.epochs) >= 0)
+                    & (int(ts.now) < np.asarray(ts.expires))
+                )
+            )
+            if pending:
+                from repro.core.maintenance import _remap_tombstones
+
+                new_ts = _remap_tombstones(ts, len(st.deltas))
+            else:
+                new_ts = empty_tombstones(0, lanes, now=ts.now)
         return TableState(
             base=new_base,
             deltas=(),
-            tombstones=empty_tombstones(0, self.schema.key_lanes),
+            tombstones=new_ts,
             table=self,
         )
 
@@ -771,12 +1007,23 @@ class DistributedHashTable:
     def query(self, state, queries) -> jax.Array:
         """Multiplicity of each global query key. Returns (Nq,) int32.
 
+        With hot-key replication active (keys in the ``hot_keys``
+        registry), one extra routed round per replica rank merges the
+        counts of rows spread off their hash owner — non-replicated keys
+        count 0 on every round but the first, so the sum is exact for
+        every key.  Without registered hot keys this is the single fused
+        round, jaxpr-unchanged.
+
         .. deprecated:: thin shim over :meth:`plan_query`; accepts a bare
            ``DistributedHashGraph`` or a ``TableState``.
         """
-        return plans.exec_query(
-            self, as_state(self, state), self._pack_queries(queries)
-        )
+        st = as_state(self, state)
+        q = self._pack_queries(queries)
+        total = plans.exec_query(self, st, q)
+        rounds = max(self.hot_keys.values(), default=1)
+        for r in range(1, rounds):
+            total = total + plans.exec_query(self, st, q, dest_offset=r)
+        return total
 
     def contains(self, state, queries) -> jax.Array:
         return self.query(state, queries) > 0

@@ -199,8 +199,12 @@ def warm_server(
     trigger = policy.max_delta_depth
     if trigger is None or trigger > table.max_deltas:
         trigger = table.max_deltas
-    fold_k = min(max(1, policy.fold_k), max(1, trigger - 1))
-    folds_incremental = trigger is not None and policy.fold_k < trigger
+    # Stats-driven policies (fold_k=None) size each fold at runtime; warm
+    # the single-step geometry (their cold-prefix walk returns >= 1) and
+    # let fold_horizon cover repetition.
+    pfk = 1 if policy.fold_k is None else policy.fold_k
+    fold_k = min(max(1, pfk), max(1, trigger - 1))
+    folds_incremental = trigger is not None and pfk < trigger
     if not folds_incremental:
         fold_horizon = 0  # escalations full-compact: geometry is data-sized
 

@@ -413,6 +413,23 @@ class AsyncFrontend:
         self._write_backpressure(timeout)
         self.server.submit_delete(keys)
 
+    def submit_upsert(
+        self,
+        keys,
+        values=None,
+        *,
+        ttl: Optional[int] = None,
+        timeout: Optional[float] = None,
+    ):
+        """Queue one insert-or-replace through the bounded backlog.
+
+        KV semantics (``TableServer.submit_upsert``): prior versions are
+        hidden, later reads see exactly the new values, ``ttl`` schedules
+        expiry on the server's logical clock.
+        """
+        self._write_backpressure(timeout)
+        self.server.submit_upsert(keys, values, ttl=ttl)
+
     # -- worker loops ----------------------------------------------------------------
     def _dispatch_loop(self) -> None:
         while True:

@@ -209,7 +209,7 @@ class TableServer:
             ]
         with self._lock:
             for k, v in ops:
-                self._writes.append(("insert", k, v))
+                self._writes.append(("insert", k, v, None))
 
     def submit_delete(self, keys) -> None:
         """Queue one delete batch (applied by the writer loop).
@@ -225,7 +225,62 @@ class TableServer:
         chunk = max(1, self.table.tombstone_capacity // 2)
         with self._lock:
             for i in range(0, max(1, keys.shape[0]), chunk):
-                self._writes.append(("delete", keys[i : i + chunk], None))
+                self._writes.append(("delete", keys[i : i + chunk], None, None))
+
+    def submit_upsert(self, keys, values=None, *, ttl: Optional[int] = None) -> None:
+        """Queue one insert-or-replace batch (KV semantics; see
+        :meth:`DistributedHashTable.upsert`).
+
+        The batch is keep-last deduplicated at admission (one winner per
+        key) and chunked like inserts; each chunk applies as one
+        delete-prior-versions + one bucket-padded delta build, so with
+        ``write_bucket`` set every upsert delta shares the warmed insert
+        geometry — AOT reads never retrace.  ``ttl`` schedules expiry of
+        the new version at ``now + ttl`` on the server's logical clock
+        (:meth:`advance`).
+        """
+        schema = self.table.schema
+        keys = schema.pack_keys(keys)
+        n = keys.shape[0]
+        if values is None:
+            values = np.arange(n, dtype=np.int32)
+            if schema.value_cols > 1:
+                values = np.stack([values] * schema.value_cols, axis=1)
+        values = schema.pack_values(values)
+        # Keep-last dedup at admission: KV semantics demand one winner per
+        # key per batch, and deduping host-side keeps the applied chunks
+        # disjoint (cross-chunk duplicates would re-tombstone fresh rows).
+        kn = np.asarray(keys)
+        vn = np.asarray(values)
+        rows = kn if kn.ndim == 2 else kn[:, None]
+        _, first = np.unique(rows[::-1], axis=0, return_index=True)
+        keep = np.sort(rows.shape[0] - 1 - first)
+        keep = keep[~np.all(rows[keep] == np.uint32(EMPTY_KEY), axis=1)]
+        if keep.shape[0] == 0:
+            return
+        keys = jnp.asarray(kn[keep])
+        values = jnp.asarray(vn[keep])
+        chunk = self.write_bucket or max(1, keys.shape[0])
+        chunk = min(chunk, max(1, self.table.tombstone_capacity // 2))
+        with self._lock:
+            for i in range(0, keys.shape[0], chunk):
+                self._writes.append(
+                    ("upsert", keys[i : i + chunk], values[i : i + chunk], ttl)
+                )
+
+    def advance(self, now) -> None:
+        """Advance the serving logical clock to ``now``; publish.
+
+        TTL expiry is resolved against this clock at read time, so
+        advancing it is how upserted rows age out of every later read.
+        The clock is a *data* field of the state (no structure change —
+        AOT executors keep matching); monotone by contract.  Blocks
+        briefly on the shadow-mutation mutex (a fold in flight finishes
+        first).
+        """
+        with self._writer_mutex:
+            self._shadow = self._shadow.advance(now)
+            self.registry.publish(self._shadow)
 
     def pending(self) -> int:
         return len(self._writes)
@@ -264,12 +319,15 @@ class TableServer:
                     if self.policy.due(stats):
                         self._fold_shadow()
                         stats = self._shadow.stats()
-                    kind, keys, values = op
+                    kind, keys, values, ttl = op
                     if kind == "insert":
                         self._shadow = self.table.insert(self._shadow, keys, values)
                         stats = dataclasses.replace(
                             stats, delta_depth=len(self._shadow.deltas)
                         )
+                    elif kind == "upsert":
+                        self._apply_upsert(keys, values, ttl)
+                        stats = None  # delta depth AND tombstones moved
                     else:
                         self._shadow = self.table.delete(self._shadow, keys)
                         stats = None  # tombstone signals moved: re-read
@@ -291,6 +349,29 @@ class TableServer:
             return applied
         finally:
             self._writer_mutex.release()
+
+    def _apply_upsert(self, keys, values, ttl) -> None:
+        """Apply one (deduped, unpadded) upsert chunk to the shadow.
+
+        The delete-then-insert of ``table.upsert``, with the insert padded
+        to ``write_bucket`` when set — the upsert delta then shares the
+        warmed insert geometry, so the state signature stays inside the
+        AOT grid and reads never retrace.  Only *real* keys are
+        tombstoned (padding sentinels would burn buffer slots).
+        """
+        shadow = self.table.delete(self._shadow, keys)  # epoch d
+        k_pad, v_pad = self._pad_insert(keys, values, bucket=self.write_bucket)
+        shadow = self.table.insert(shadow, k_pad, v_pad)  # epoch d + 1
+        if ttl is not None:
+            shadow = dataclasses.replace(
+                shadow,
+                tombstones=shadow.tombstones.push(
+                    keys,
+                    epoch=len(shadow.deltas),
+                    expires=shadow.tombstones.now + jnp.int32(ttl),
+                ),
+            )
+        self._shadow = shadow
 
     # -- maintenance (off the read path) --------------------------------------
     def maintain(self) -> bool:
@@ -316,7 +397,12 @@ class TableServer:
     def _fold_shadow(self) -> None:
         stats = self._shadow.stats()
         escalate = self.policy.escalates(stats)
-        k = self.policy.fold_amount(stats)
+        layer_live = None
+        if self.policy.fold_k is None and not escalate and stats.delta_depth:
+            # Stats-driven sizing: one counts round measures per-layer live
+            # rows and the policy folds the longest cold prefix first.
+            layer_live = maintenance.collect_layer_live(self._shadow)
+        k = self.policy.fold_amount(stats, layer_live)
         if not escalate and not k:
             return
         # An incoherent shadow (skew-guard fallback) cannot fold locally —
@@ -335,15 +421,23 @@ class TableServer:
         t0 = time.perf_counter()
         self._shadow = fold_fn(self._shadow)
         if full and self.write_bucket is not None:
-            # compact() resets the tombstone buffer to zero capacity;
-            # shape-stable serving re-grows it immediately so the state
-            # structure (and with it the AOT executor keys) stays fixed.
-            self._shadow = dataclasses.replace(
-                self._shadow,
-                tombstones=empty_tombstones(
-                    self.table.tombstone_capacity, self.table.schema.key_lanes
-                ),
-            )
+            # compact() resets the tombstone buffer to zero capacity when
+            # nothing was pending; shape-stable serving re-grows it
+            # immediately (clock preserved) so the state structure — and
+            # with it the AOT executor keys — stays fixed.  With pending
+            # TTL entries compact() already returned the capacity-preserving
+            # remap, which must NOT be overwritten (the entries guard rows
+            # that survived into the new base).
+            ts = self._shadow.tombstones
+            if ts.capacity != self.table.tombstone_capacity:
+                self._shadow = dataclasses.replace(
+                    self._shadow,
+                    tombstones=empty_tombstones(
+                        self.table.tombstone_capacity,
+                        self.table.schema.key_lanes,
+                        now=ts.now,
+                    ),
+                )
         if full:
             self._full_compacts += 1
         else:
