@@ -25,16 +25,23 @@ Three measurements of the serve_table engine:
    and then offered a configurable request rate; latency is measured from
    the *intended* arrival instant to future resolution, so queueing and
    admission delay count against the server, not the generator.  Reported
-   per offered rate: p50/p99/p999 latency and goodput (responses inside
-   the ``--slo-ms`` budget per second).  With ``--smoke`` the stream also
-   mixes writes and a policy-triggered incremental fold through the
-   front end and *asserts* zero live traces/compiles (every read batch
-   hits the warmed executor grid and the jit dispatch cache stays flat)
-   plus a generous p99 bound — a single retrace (~seconds on CPU) blows
-   the bound loudly.
+   per offered rate: p50/p99/p999 latency, goodput (responses inside the
+   ``--slo-ms`` budget per second), and the traced per-phase breakdown
+   (admission/linger/dispatch/device/scatter) out of the observability
+   registry.  Each rate also runs a **tracing-overhead control pair**: a
+   read-only stream with tracing disabled vs enabled, on frozen table
+   geometry, isolating what the span bookkeeping itself costs (under
+   ``--smoke`` each mode runs interleaved repeats and scores its best
+   p99 — single-run tails on a 1-core CI box are scheduler noise).  With
+   ``--smoke`` the mixed stream (writes + a policy-triggered fold through
+   the front end) additionally *asserts*, by scraping the rendered
+   Prometheus export the way an external monitor would: zero live traces,
+   zero dropped rows, zero AOT misses and a flat jit dispatch cache
+   (:func:`benchmarks.common.assert_clean_run`), the fused two-all-to-all
+   budget on every profiled executor, a generous p99 bound, and < 5%
+   tracing overhead on the control pair.
 """
 import argparse
-import json
 import threading
 import time
 
@@ -75,7 +82,7 @@ def main() -> None:
     import jax
     import numpy as np
 
-    from benchmarks.common import emit, time_fn
+    from benchmarks.common import emit, time_fn, write_bench_json
     from repro.core import maintenance
     from repro.core.table import DistributedHashTable
     from repro.serve_table import CompactionPolicy, MicroBatcher, TableServer
@@ -166,6 +173,7 @@ def main() -> None:
     )
 
     # ---- 3. smoke: background fold must not stall reads ---------------------
+    server = None
     if args.smoke:
         policy = CompactionPolicy(max_delta_depth=64, fold_k=2)  # manual folds
         server = TableServer(table, keys, vals, policy=policy)
@@ -232,13 +240,14 @@ def main() -> None:
         )
 
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(
-                {"bench": "serve", "devices": d, "keys": n, "rows": rows},
-                f,
-                indent=2,
-            )
-        print(f"wrote {args.json}")
+        write_bench_json(
+            args.json,
+            "serve",
+            rows,
+            snapshot=server.metrics() if server is not None else None,
+            devices=d,
+            keys=n,
+        )
 
 
 def _open_loop(args) -> None:
@@ -246,9 +255,12 @@ def _open_loop(args) -> None:
     import jax
     import numpy as np
 
-    from benchmarks.common import emit
+    from benchmarks.common import assert_clean_run, emit, write_bench_json
     from repro.core import plans
     from repro.core.table import DistributedHashTable
+    from repro.obs import parse_prometheus, render_prometheus
+    from repro.obs.registry import HistogramSnapshot
+    from repro.obs.tracing import PHASES
     from repro.serve_table import (
         AsyncFrontend,
         CompactionPolicy,
@@ -298,7 +310,7 @@ def _open_loop(args) -> None:
         "serve_async_warmup",
         warm.compile_seconds,
         entries=warm.entries,
-        buckets=",".join(str(b) for b in warm.buckets),
+        buckets=",".join(str(b) for b in warm_buckets),
         fold_horizon=warm.fold_horizon,
     )
     cache_size = getattr(plans.exec_query, "_cache_size", None)
@@ -313,6 +325,102 @@ def _open_loop(args) -> None:
             "fold_horizon": warm.fold_horizon,
         }
     ]
+
+    # Per-executor device-cost profiles out of the warmup's jaxpr walk —
+    # the per-artifact record that the routing stayed inside the paper's
+    # two-all-to-all budget at every warmed delta depth.
+    profiles = server.batcher.executors.cost_profile()
+    for p in profiles:
+        rows.append({"part": "executor_cost", **p.as_dict()})
+        emit(
+            "serve_async_executor_cost",
+            0.0,
+            kind=p.kind,
+            bucket=p.bucket,
+            depth=p.depth,
+            all_to_alls=p.all_to_alls,
+            collective_bytes=p.total_collective_bytes,
+        )
+    if args.smoke:
+        assert profiles, "warmup produced no executor cost profiles"
+        for p in profiles:
+            assert p.all_to_alls == 2, (
+                f"{p.kind} executor (bucket {p.bucket}, depth {p.depth}) uses "
+                f"{p.all_to_alls} all-to-alls — fused 2-round budget broken"
+            )
+
+    def drive(fe, rate: float, duration: float, write_ops: dict):
+        """One open-loop stream; returns (lat, failures, submitted, wall)."""
+        lat: list = []
+        failures: list = []
+        done_lock = threading.Lock()
+        t0 = time.perf_counter()
+        next_t = t0
+        submitted = 0
+        while next_t - t0 < duration:
+            now = time.perf_counter()
+            if now < next_t:
+                time.sleep(next_t - now)
+            op = write_ops.get(submitted)
+            if op is not None:
+                (fe.submit_insert if op[0] == "insert" else fe.submit_delete)(
+                    op[1], timeout=30.0
+                )
+            q = rng.choice(seed_keys, size=args.req_keys).astype(np.uint32)
+            t_arr = next_t  # intended arrival: open-loop latency epoch
+
+            def _done(fut, t=t_arr):
+                dt = time.perf_counter() - t
+                with done_lock:
+                    if fut.exception() is None:
+                        lat.append(dt)
+                    else:
+                        failures.append(fut.exception())
+
+            fe.submit_query(q, timeout=30.0).add_done_callback(_done)
+            submitted += 1
+            next_t += rng.exponential(1.0 / rate)
+        deadline = time.perf_counter() + 60.0
+        while True:
+            with done_lock:
+                if len(lat) + len(failures) >= submitted:
+                    break
+            if time.perf_counter() > deadline:
+                raise TimeoutError(
+                    f"open loop: {submitted - len(lat) - len(failures)} "
+                    "responses never resolved"
+                )
+            time.sleep(0.002)
+        server.drain(timeout=60.0)
+        return lat, failures, submitted, time.perf_counter() - t0
+
+    def phase_breakdown(before, after) -> dict:
+        """Per-phase latency stats from the delta of two registry snapshots."""
+        out = {}
+        for phase in PHASES:
+            a = after.histogram("trace_phase_seconds", {"phase": phase})
+            if a is None:
+                continue
+            b = before.histogram("trace_phase_seconds", {"phase": phase})
+            if b is not None and b.count:
+                a = HistogramSnapshot(
+                    count=a.count - b.count,
+                    sum=a.sum - b.sum,
+                    min=a.min,
+                    max=a.max,
+                    bounds=a.bounds,
+                    counts=tuple(x - y for x, y in zip(a.counts, b.counts)),
+                )
+            if not a.count:
+                continue
+            out[phase] = {
+                "count": a.count,
+                "mean_ms": a.mean * 1e3,
+                "p50_ms": a.p50 * 1e3,
+                "p99_ms": a.p99 * 1e3,
+            }
+        return out
+
     slo = args.slo_ms / 1e3
     for rate in [float(r) for r in args.rates.split(",")]:
         expected = max(1, int(rate * args.duration))
@@ -333,10 +441,7 @@ def _open_loop(args) -> None:
             }
 
         cache0 = cache_size() if cache_size else None
-        lat = []
-        failures = []
-        done_lock = threading.Lock()
-
+        snap_before = server.metrics(refresh=False)
         with AsyncFrontend(
             server,
             linger=0.002,
@@ -344,46 +449,12 @@ def _open_loop(args) -> None:
             default_deadline=slo,
             write_backlog=32,
         ) as fe:
-            t0 = time.perf_counter()
-            next_t = t0
-            submitted = 0
-            while next_t - t0 < args.duration:
-                now = time.perf_counter()
-                if now < next_t:
-                    time.sleep(next_t - now)
-                op = write_ops.get(submitted)
-                if op is not None:
-                    (fe.submit_insert if op[0] == "insert" else fe.submit_delete)(
-                        op[1], timeout=30.0
-                    )
-                q = rng.choice(seed_keys, size=args.req_keys).astype(np.uint32)
-                t_arr = next_t  # intended arrival: open-loop latency epoch
-
-                def _done(fut, t=t_arr):
-                    dt = time.perf_counter() - t
-                    with done_lock:
-                        if fut.exception() is None:
-                            lat.append(dt)
-                        else:
-                            failures.append(fut.exception())
-
-                fe.submit_query(q, timeout=30.0).add_done_callback(_done)
-                submitted += 1
-                next_t += rng.exponential(1.0 / rate)
-            deadline = time.perf_counter() + 60.0
-            while True:
-                with done_lock:
-                    if len(lat) + len(failures) >= submitted:
-                        break
-                if time.perf_counter() > deadline:
-                    raise TimeoutError(
-                        f"open loop: {submitted - len(lat) - len(failures)} "
-                        "responses never resolved"
-                    )
-                time.sleep(0.002)
-            server.drain(timeout=60.0)
-            wall = time.perf_counter() - t0
-        st = fe.stats()
+            lat, failures, submitted, wall = drive(
+                fe, rate, args.duration, write_ops
+            )
+        fe.metrics()  # refresh trace_live / queue-depth gauges post-drain
+        snap = server.metrics()  # ONE atomic sample, state gauges refreshed
+        st = fe.stats(snapshot=snap)
         wstats = server.stats()
         row = {
             "part": "open_loop",
@@ -401,6 +472,7 @@ def _open_loop(args) -> None:
             "batches_due": st.batches_due,
             "aot_hits": wstats.warmup.aot_hits,
             "aot_misses": wstats.warmup.aot_misses,
+            "phases": phase_breakdown(snap_before, snap),
         }
         rows.append(row)
         emit(
@@ -417,15 +489,24 @@ def _open_loop(args) -> None:
         if args.smoke:
             assert not failures, f"{len(failures)} requests failed: {failures[:3]}"
             assert len(lat) == submitted, "lost responses"
-            assert wstats.warmup.aot_misses == 0, (
-                f"{wstats.warmup.aot_misses} read batches fell off the warmed "
-                "executor grid — live tracing happened"
+            # The shared smoke gate off one snapshot (AOT misses, dropped
+            # rows, skew fallbacks, failed requests, live traces, flat jit
+            # cache) ...
+            assert_clean_run(
+                snap, baseline_cache_size=cache0, context=f"rate {rate:.0f}"
             )
-            if cache0 is not None:
-                assert cache_size() == cache0, (
-                    f"jit dispatch cache grew {cache0} -> {cache_size()} during "
-                    "the open-loop stream: a live trace slipped past AOT warmup"
-                )
+            # ... re-asserted through the scrape path an external monitor
+            # would use: render the Prometheus text and parse it back.
+            scraped = parse_prometheus(render_prometheus(snap))
+            assert scraped.get(("trace_live", ()), 0) == 0, (
+                "Prometheus export shows live traces after drain"
+            )
+            assert scraped.get(("serve_dropped_rows", ()), 0) == 0, (
+                "Prometheus export shows dropped rows"
+            )
+            assert scraped.get(("aot_misses_total", ()), 0) == 0, (
+                "Prometheus export shows AOT misses"
+            )
             assert wstats.folds >= 1, "mixed stream never triggered a fold"
             assert row["p99_ms"] < 500.0, (
                 f"p99 {row['p99_ms']:.1f}ms over the smoke bound (500ms): "
@@ -437,20 +518,77 @@ def _open_loop(args) -> None:
                 f"0 traces after warmup ({wstats.warmup.aot_hits} AOT hits)"
             )
 
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(
-                {
-                    "bench": "serve_async",
-                    "devices": d,
-                    "keys": n,
-                    "slo_ms": args.slo_ms,
-                    "rows": rows,
-                },
-                f,
-                indent=2,
+        # ---- tracing-overhead control pair (read-only, frozen geometry) ----
+        # No writes, no folds: both runs serve identical warmed executors,
+        # so the only difference is the span bookkeeping itself.  A single
+        # run's p99 on a 1-core CI box is scheduler-noise-dominated (the
+        # fake 8-device mesh time-slices one core), so each mode runs
+        # ``repeats`` times interleaved (control, traced, control, ...) and
+        # scores its *best* p99 — the run least disturbed by the scheduler,
+        # which is the one that isolates the bookkeeping cost.
+        repeats = 3 if args.smoke else 1
+        ro = {"control": [], "traced": []}
+        for _ in range(repeats):
+            for mode, tracing in (("control", False), ("traced", True)):
+                with AsyncFrontend(
+                    server,
+                    linger=0.002,
+                    flush_keys=flush_keys,
+                    default_deadline=slo,
+                    write_backlog=32,
+                    tracing=tracing,
+                ) as fe2:
+                    run = drive(fe2, rate, args.duration, {})
+                assert not run[1], f"{mode} run had failures: {run[1][:3]}"
+                ro[mode].append(run)
+
+        def best(mode, q):
+            return min(
+                float(np.percentile(run[0], q) * 1e3) for run in ro[mode]
             )
-        print(f"wrote {args.json}")
+
+        c_p50, c_p99 = best("control", 50), best("control", 99)
+        t_p50, t_p99 = best("traced", 50), best("traced", 99)
+        row2 = {
+            "part": "tracing_overhead",
+            "rate_offered": rate,
+            "control_p50_ms": c_p50,
+            "control_p99_ms": c_p99,
+            "traced_p50_ms": t_p50,
+            "traced_p99_ms": t_p99,
+            "overhead_p99_pct": (t_p99 / c_p99 - 1.0) * 100.0 if c_p99 else 0.0,
+        }
+        rows.append(row2)
+        emit(
+            "serve_async_tracing_overhead",
+            ro["traced"][-1][3],
+            rate=rate,
+            control_p99_ms=f"{c_p99:.3f}",
+            traced_p99_ms=f"{t_p99:.3f}",
+            overhead_p99_pct=f"{row2['overhead_p99_pct']:.2f}",
+        )
+        if args.smoke:
+            # < 5% p99 regression, with a 2ms absolute floor so scheduler
+            # noise on a 1-core CI box can't fail a microsecond-level cost.
+            assert t_p99 <= c_p99 * 1.05 + 2.0, (
+                f"tracing overhead too high: p99 {c_p99:.2f}ms -> {t_p99:.2f}ms "
+                f"({row2['overhead_p99_pct']:.1f}%, budget 5% + 2ms)"
+            )
+            print(
+                f"tracing overhead: p99 {c_p99:.2f}ms untraced -> {t_p99:.2f}ms "
+                f"traced ({row2['overhead_p99_pct']:+.1f}%)"
+            )
+
+    if args.json:
+        write_bench_json(
+            args.json,
+            "serve_async",
+            rows,
+            snapshot=server.metrics(),
+            devices=d,
+            keys=n,
+            slo_ms=args.slo_ms,
+        )
 
 
 if __name__ == "__main__":

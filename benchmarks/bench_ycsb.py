@@ -36,7 +36,6 @@ Output: one row per letter (throughput, read p50/p99, op counts) into
 from __future__ import annotations
 
 import argparse
-import json
 import threading
 import time
 
@@ -64,7 +63,7 @@ def main() -> None:
     import jax
     import numpy as np
 
-    from benchmarks.common import emit
+    from benchmarks.common import assert_clean_run, emit, write_bench_json
     from repro.cache.workload import WORKLOADS, YCSBWorkload, key_of
     from repro.core import plans
     from repro.core.table import DistributedHashTable
@@ -245,6 +244,8 @@ def main() -> None:
             server.drain(timeout=120.0)
             wall = time.perf_counter() - t0
 
+        fe.metrics()  # refresh trace_live / queue-depth gauges post-drain
+        snap = server.metrics()  # ONE atomic registry sample per letter
         wstats = server.stats()
         row = {
             "part": "workload",
@@ -283,31 +284,19 @@ def main() -> None:
                 f"{failures[:3]}"
             )
             assert len(lat) == submitted, f"workload {letter}: lost responses"
-            assert wstats.shadow.num_dropped == 0, (
-                f"workload {letter}: {wstats.shadow.num_dropped} rows dropped "
-                "(delta build or tombstone overflow)"
-            )
-            assert wstats.shadow.tombstone_dropped == 0, (
-                f"workload {letter}: tombstone buffer overflowed"
-            )
-            assert wstats.skew_fallbacks == 0, (
-                f"workload {letter}: {wstats.skew_fallbacks} inserts routed "
-                "incoherent by the skew guard"
-            )
-            assert wstats.warmup.aot_misses == 0, (
-                f"workload {letter}: {wstats.warmup.aot_misses} read batches "
-                "fell off the warmed executor grid — live tracing happened"
+            # Shared smoke gate (zero AOT misses, zero dropped rows, zero
+            # skew fallbacks, zero live traces, flat jit cache) off ONE
+            # registry snapshot; only the letter-specific fold-forecast
+            # check stays inline.
+            assert_clean_run(
+                snap,
+                baseline_cache_size=cache0,
+                context=f"workload {letter}",
             )
             assert wstats.full_compacts == 0, (
                 f"workload {letter}: {wstats.full_compacts} full compacts — "
                 "the fold forecast missed (geometry left the warmed grid)"
             )
-            if cache0 is not None:
-                assert cache_size() == cache0, (
-                    f"workload {letter}: jit dispatch cache grew "
-                    f"{cache0} -> {cache_size()}: a live trace slipped past "
-                    "AOT warmup"
-                )
 
     if args.smoke:
         wstats = server.stats()
@@ -319,22 +308,18 @@ def main() -> None:
         )
 
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(
-                {
-                    "bench": "ycsb",
-                    "devices": d,
-                    "keys": n,
-                    "ops_per_workload": args.ops,
-                    "theta": args.theta,
-                    "write_bucket": wb,
-                    "flush_keys": flush_keys,
-                    "rows": rows,
-                },
-                f,
-                indent=2,
-            )
-        print(f"wrote {args.json}")
+        write_bench_json(
+            args.json,
+            "ycsb",
+            rows,
+            snapshot=server.metrics(),
+            devices=d,
+            keys=n,
+            ops_per_workload=args.ops,
+            theta=args.theta,
+            write_bucket=wb,
+            flush_keys=flush_keys,
+        )
 
 
 if __name__ == "__main__":

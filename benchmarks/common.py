@@ -1,15 +1,34 @@
-"""Shared benchmark helpers: wall timing + CSV emit.
+"""Shared benchmark helpers: wall timing, CSV emit, stamped JSON artifacts.
 
 CPU numbers are *indicative* (TPU is the target); the harness per paper
 table is the deliverable — the same scripts run unmodified on a TPU pod.
+
+Every ``BENCH_*.json`` artifact goes through :func:`write_bench_json`, so
+each one carries the same envelope: a schema version, host metadata
+(device count, backend, CPU count), and — when the script hands one
+over — a full :class:`~repro.obs.registry.RegistrySnapshot` of the
+serving stack's metrics at the end of the run.  Comparing two artifacts
+therefore never requires guessing what machine or code shape produced
+them.
+
+:func:`assert_clean_run` is the shared CI gate: the zero-drop / zero-miss
+invariants every smoke benchmark used to restate inline, asserted off one
+registry snapshot.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import numpy as np
+
+#: Bump when the artifact envelope changes shape.  v1 was the bare
+#: ``{"bench": ..., "rows": [...]}`` dict; v2 adds ``schema_version``,
+#: ``host`` and the optional ``metrics`` registry snapshot.
+BENCH_SCHEMA_VERSION = 2
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
@@ -28,3 +47,100 @@ def emit(name: str, seconds: float, **derived) -> None:
     """One CSV row: name,seconds,k=v,..."""
     kv = ",".join(f"{k}={v}" for k, v in derived.items())
     print(f"BENCH,{name},{seconds:.6f},{kv}")
+
+
+def host_metadata() -> dict:
+    """Where this artifact was measured: backend, device count, CPU count."""
+    return {
+        "backend": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        "cpu_count": os.cpu_count(),
+        "jax_version": jax.__version__,
+    }
+
+
+def write_bench_json(
+    path: str,
+    bench: str,
+    rows: list,
+    *,
+    snapshot=None,
+    registry=None,
+    **extra,
+) -> dict:
+    """Write one stamped ``BENCH_*.json`` artifact; returns the payload.
+
+    ``snapshot`` (a :class:`~repro.obs.registry.RegistrySnapshot`) or
+    ``registry`` (sampled here) lands under ``"metrics"`` — the whole
+    serving stack's counters/gauges/histograms at end of run, in the
+    nested-dict form of ``RegistrySnapshot.as_dict()``.  ``extra`` keys
+    (devices, key counts, knobs) merge into the envelope top level.
+    """
+    if snapshot is None and registry is not None:
+        snapshot = registry.snapshot()
+    payload = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "bench": bench,
+        "host": host_metadata(),
+        **extra,
+        "rows": rows,
+    }
+    if snapshot is not None:
+        payload["metrics"] = snapshot.as_dict()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    return payload
+
+
+def assert_clean_run(
+    snap,
+    *,
+    baseline_cache_size: Optional[int] = None,
+    context: str = "",
+) -> None:
+    """The shared smoke-gate invariants, off ONE registry snapshot.
+
+    ``snap`` must come from ``server.metrics()`` (refreshed gauges) taken
+    after the run — and after ``frontend.metrics()`` when a front end was
+    involved, so ``trace_live``/``frontend_failed_total`` are populated.
+    Asserts, with zero tolerance:
+
+    * no read batch fell off the warmed executor grid (``aot_misses_total``);
+    * no rows lost anywhere (``serve_dropped_rows``,
+      ``serve_tombstone_dropped``) and no skew-guard fallbacks;
+    * no failed front-end requests and no trace still open
+      (``frontend_failed_total``, ``trace_live``);
+    * with ``baseline_cache_size``: the jit dispatch cache is exactly as
+      big as before the run — a growth means a live trace slipped past
+      AOT warmup.
+    """
+    where = f"{context}: " if context else ""
+    aot_misses = int(snap.value("aot_misses_total"))
+    assert aot_misses == 0, (
+        f"{where}{aot_misses} read batches fell off the warmed executor "
+        "grid — live tracing happened"
+    )
+    dropped = int(snap.value("serve_dropped_rows"))
+    assert dropped == 0, (
+        f"{where}{dropped} rows dropped (delta build or tombstone overflow)"
+    )
+    ts_dropped = int(snap.value("serve_tombstone_dropped"))
+    assert ts_dropped == 0, f"{where}tombstone buffer overflowed ({ts_dropped})"
+    skew = int(snap.value("serve_skew_fallbacks"))
+    assert skew == 0, (
+        f"{where}{skew} inserts routed incoherent by the skew guard"
+    )
+    failed = int(snap.value("frontend_failed_total"))
+    assert failed == 0, f"{where}{failed} front-end requests failed"
+    live = int(snap.value("trace_live"))
+    assert live == 0, (
+        f"{where}{live} traces still open after drain — a request was "
+        "admitted but never resolved"
+    )
+    if baseline_cache_size is not None:
+        cache = int(snap.value("jit_dispatch_cache_size"))
+        assert cache == baseline_cache_size, (
+            f"{where}jit dispatch cache grew {baseline_cache_size} -> "
+            f"{cache}: a live trace slipped past AOT warmup"
+        )

@@ -26,6 +26,7 @@ snapshot-swapped concurrent serving.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax.numpy as jnp
@@ -36,6 +37,7 @@ from repro.core.hashgraph import EMPTY_KEY
 from repro.core.maintenance import CompactionPolicy
 from repro.core.state import TableState
 from repro.core.table import DistributedHashTable, retrieval_to_lists
+from repro.obs.registry import MetricsRegistry, RegistrySnapshot
 
 
 class KVCache:
@@ -60,9 +62,33 @@ class KVCache:
         *,
         default_ttl: Optional[int] = None,
         policy: Optional[CompactionPolicy] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.table = table
         self.default_ttl = default_ttl
+        self.metrics_registry = metrics if metrics is not None else MetricsRegistry()
+        reg = self.metrics_registry
+        self._c_puts = reg.counter(
+            "kvcache_puts_total", help="put() batches applied."
+        )
+        self._c_gets = reg.counter(
+            "kvcache_gets_total", help="get()/contains() batches served."
+        )
+        self._c_deletes = reg.counter(
+            "kvcache_deletes_total", help="delete() batches applied."
+        )
+        self._c_evictions = reg.counter(
+            "kvcache_evictions_total", help="Full compacts run by maintenance."
+        )
+        self._c_folds = reg.counter(
+            "kvcache_folds_total", help="Incremental folds run by maintenance."
+        )
+        self._h_put = reg.histogram(
+            "kvcache_put_seconds", help="put() wall-clock latency."
+        )
+        self._h_get = reg.histogram(
+            "kvcache_get_seconds", help="get() wall-clock latency."
+        )
         self.policy = policy or CompactionPolicy(
             max_delta_depth=table.max_deltas,
             fold_k=None,
@@ -107,12 +133,15 @@ class KVCache:
         ``table.upsert``.  ``ttl=None`` falls back to ``default_ttl``;
         pass ``ttl=0`` for an immediately-expired (inert) write.
         """
+        t0 = time.perf_counter()
         stats = self.state.stats()
         if self.policy.due(stats):
             self.maintain(stats=stats, force=True)
         if ttl is None:
             ttl = self.default_ttl
         self.state = self.table.upsert(self.state, keys, values, ttl=ttl)
+        self._c_puts.inc()
+        self._h_put.observe(time.perf_counter() - t0)
 
     def delete(self, keys) -> None:
         """Drop ``keys`` from every later read (tombstoned immediately)."""
@@ -120,6 +149,7 @@ class KVCache:
         if self.policy.due(stats):
             self.maintain(stats=stats, force=True)
         self.state = self.table.delete(self.state, keys)
+        self._c_deletes.inc()
 
     # -- reads ---------------------------------------------------------------
     def _pad_queries(self, keys) -> tuple[jnp.ndarray, int]:
@@ -135,6 +165,7 @@ class KVCache:
     def contains(self, keys) -> np.ndarray:
         """Boolean per key: live (unexpired) entry present?"""
         q, n = self._pad_queries(keys)
+        self._c_gets.inc()
         return np.asarray(self.table.query(self.state, q))[:n] > 0
 
     def get(self, keys, *, fill: int = -1) -> np.ndarray:
@@ -144,9 +175,12 @@ class KVCache:
         Under the KV discipline every present key has exactly one live
         row, so the per-key value list is its single element.
         """
+        t0 = time.perf_counter()
         q, n = self._pad_queries(keys)
         res = self.table.retrieve(self.state, q)
         per_key = retrieval_to_lists(res)[:n]
+        self._c_gets.inc()
+        self._h_get.observe(time.perf_counter() - t0)
         cols = self.table.schema.value_cols
         out = np.full((n,) if cols == 1 else (n, cols), fill, np.int32)
         for i, vals in enumerate(per_key):
@@ -163,6 +197,29 @@ class KVCache:
         """The underlying ``TableStats`` (includes ``tombstone_expired``)."""
         return self.state.stats()
 
+    def metrics(self, refresh: bool = True) -> RegistrySnapshot:
+        """One atomic sample of the cache's metrics registry.
+
+        With ``refresh`` (default) the state-derived gauges — delta depth,
+        tombstone load/expired, logical clock — are re-read first.
+        """
+        if refresh:
+            st = self.state.stats()
+            reg = self.metrics_registry
+            reg.gauge("kvcache_delta_depth", help="Live delta layers.").set(
+                st.delta_depth
+            )
+            reg.gauge(
+                "kvcache_tombstone_load", help="Tombstone fill fraction."
+            ).set(st.tombstone_load)
+            reg.gauge(
+                "kvcache_expired_load", help="Expired tombstone fraction."
+            ).set(st.expired_load)
+            reg.gauge("kvcache_now", help="Logical clock TTLs expire on.").set(
+                self.now
+            )
+        return self.metrics_registry.snapshot()
+
     def maintain(self, *, stats=None, force: bool = False) -> bool:
         """Run one policy-driven fold/evict pass; True iff anything ran.
 
@@ -178,8 +235,7 @@ class KVCache:
             return False
         escalate = self.policy.escalates(stats)
         if escalate or not self.state.coherent:
-            self.state = self.state.compact()
-            self.evictions += 1
+            self._run_fold(full=True)
             return True
         layer_live = None
         if self.policy.fold_k is None and stats.delta_depth:
@@ -187,13 +243,28 @@ class KVCache:
         k = self.policy.fold_amount(stats, layer_live)
         if not k:
             return False
-        if k >= stats.delta_depth:
+        self._run_fold(full=k >= stats.delta_depth, k=k)
+        return True
+
+    def _run_fold(self, *, full: bool, k: int = 0) -> None:
+        """One timed fold/compact with the shared metrics recording."""
+        t0 = time.perf_counter()
+        rows_before = maintenance.allocated_rows(self.state)
+        if full:
             self.state = self.state.compact()
             self.evictions += 1
+            self._c_evictions.inc()
         else:
             self.state = maintenance.fold_oldest(self.state, k)
             self.folds += 1
-        return True
+            self._c_folds.inc()
+        maintenance.record_fold(
+            self.metrics_registry,
+            kind="full" if full else "fold",
+            seconds=time.perf_counter() - t0,
+            rows_before=rows_before,
+            rows_after=maintenance.allocated_rows(self.state),
+        )
 
     def evict_expired(self) -> int:
         """Force a full compact; returns rows reclaimed (allocated delta).
@@ -204,7 +275,6 @@ class KVCache:
         """
         before = self.state.stats()
         alloc_before = before.base_rows + before.delta_rows
-        self.state = self.state.compact()
-        self.evictions += 1
+        self._run_fold(full=True)
         after = self.state.stats()
         return alloc_before - (after.base_rows + after.delta_rows)

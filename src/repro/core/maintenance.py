@@ -26,6 +26,7 @@ a fold, only the atomically published result.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Optional
 
@@ -251,6 +252,60 @@ class CompactionPolicy:
 
 
 # ---------------------------------------------------------------------------
+# fold metrics — one recording helper shared by every fold driver
+# ---------------------------------------------------------------------------
+
+
+def allocated_rows(state: TableState) -> int:
+    """Total allocated CSR rows (base + deltas) — static, no device sync."""
+    return int(state.base.local.keys.shape[0]) + sum(
+        int(d.local.keys.shape[0]) for d in state.deltas
+    )
+
+
+def record_fold(
+    metrics,
+    *,
+    kind: str,
+    seconds: float,
+    rows_before: int,
+    rows_after: int,
+) -> None:
+    """Fold pause-time + reclaimed-rows into a metrics registry.
+
+    ``kind`` is ``"fold"`` (incremental) or ``"full"`` (compact
+    escalation).  Reclaimed rows are clamped at zero: an incremental fold
+    *grows* the base by the folded deltas' rows by design — only the full
+    rebuild reclaims — and a negative "reclaimed" count would poison the
+    counter's monotonicity.  One recording site per fold; drivers
+    (``TableServer._apply_fold``, ``KVCache.maintain``) call this rather
+    than passing a registry down into :func:`fold_oldest`, so a fold is
+    never double-counted.
+    """
+    if metrics is None:
+        return
+    metrics.counter(
+        "maintenance_folds_total",
+        labels={"kind": kind},
+        help="Fold/compact passes by kind (fold=incremental, full=rebuild).",
+    ).inc()
+    metrics.histogram(
+        "maintenance_fold_seconds",
+        labels={"kind": kind},
+        help="Fold pause time (the write-path stall a fold costs).",
+    ).observe(seconds)
+    reclaimed = max(0, int(rows_before) - int(rows_after))
+    metrics.counter(
+        "maintenance_reclaimed_rows_total",
+        help="Allocated CSR rows returned by folds/compactions.",
+    ).inc(reclaimed)
+    metrics.gauge(
+        "maintenance_last_reclaimed_rows",
+        help="Rows reclaimed by the most recent fold (0 when it grew).",
+    ).set(reclaimed)
+
+
+# ---------------------------------------------------------------------------
 # fold_oldest — the incremental fold
 # ---------------------------------------------------------------------------
 
@@ -320,8 +375,13 @@ def exec_fold(table, state: TableState, *, k: int):
     )(state)
 
 
-def fold_oldest(state: TableState, k: int) -> TableState:
+def fold_oldest(state: TableState, k: int, *, metrics=None) -> TableState:
     """Merge the ``k`` oldest delta layers into the base; keep the rest.
+
+    ``metrics`` (a :class:`~repro.obs.registry.MetricsRegistry`) records
+    the fold's pause time and reclaimed rows via :func:`record_fold` —
+    for *direct* callers only; the server and cache drivers time their
+    folds themselves and must not also pass a registry here.
 
     The incremental counterpart of ``state.compact()``: the new state has
     ``depth - k`` deltas, the surviving tombstones shifted down ``k``
@@ -342,13 +402,31 @@ def fold_oldest(state: TableState, k: int) -> TableState:
     if k <= 0:
         return state
     table = state.table
+    t0 = time.perf_counter()
+    rows_before = allocated_rows(state)
     if not state.coherent:
-        return table.compact(state)
+        out = table.compact(state)
+        record_fold(
+            metrics,
+            kind="full",
+            seconds=time.perf_counter() - t0,
+            rows_before=rows_before,
+            rows_after=allocated_rows(out),
+        )
+        return out
     new_base, new_ts = exec_fold(table, state, k=k)
-    return TableState(
+    out = TableState(
         base=new_base,
         deltas=state.deltas[k:],
         tombstones=new_ts,
         table=table,
         coherent=True,
     )
+    record_fold(
+        metrics,
+        kind="fold",
+        seconds=time.perf_counter() - t0,
+        rows_before=rows_before,
+        rows_after=allocated_rows(out),
+    )
+    return out

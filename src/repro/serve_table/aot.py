@@ -63,6 +63,7 @@ class WarmupStats:
     compile_seconds: float  # wall-clock cost of the warmup pass
     aot_hits: int  # live executions served by a warmed executable
     aot_misses: int  # live executions that fell back to the jit path
+    profiles: tuple = ()  # ExecutorCost rows from the warmup profiling pass
 
     @property
     def coverage(self) -> float:
@@ -86,6 +87,14 @@ class ExecutorGrid:
         self._lock = threading.Lock()
         self._hits = 0
         self._misses = 0
+        # Mirror counters in a shared MetricsRegistry (None until bound).
+        # The plain ints stay authoritative for THIS grid's stats; the
+        # registry counters accumulate across re-warms (a replaced grid
+        # binds to the same registry), matching Prometheus counter
+        # semantics.
+        self._hit_counter = None
+        self._miss_counter = None
+        self.profiles: tuple = ()  # ExecutorCost rows (warmup profiling pass)
         self._meta = {
             "write_bucket": 0,
             "buckets": (),
@@ -93,6 +102,21 @@ class ExecutorGrid:
             "fold_horizon": 0,
             "compile_seconds": 0.0,
         }
+
+    def bind_registry(self, registry) -> None:
+        """Mirror hit/miss counts into ``registry`` (carrying current counts)."""
+        with self._lock:
+            self._hit_counter = registry.counter(
+                "aot_hits_total", help="Reads served by an AOT-warmed executable."
+            )
+            self._miss_counter = registry.counter(
+                "aot_misses_total",
+                help="Reads that fell back to the jit plan path.",
+            )
+            if self._hits:
+                self._hit_counter.inc(self._hits)
+            if self._misses:
+                self._miss_counter.inc(self._misses)
 
     def __len__(self) -> int:
         return len(self._handles)
@@ -122,9 +146,22 @@ class ExecutorGrid:
             h = self._handles.get(key)
             if h is None:
                 self._misses += 1
+                if self._miss_counter is not None:
+                    self._miss_counter.inc()
             else:
                 self._hits += 1
+                if self._hit_counter is not None:
+                    self._hit_counter.inc()
             return h
+
+    def _peek(self, key) -> Optional[CompiledPlan]:
+        """Uncounted lookup (warmup-internal; never a coverage signal)."""
+        with self._lock:
+            return self._handles.get(key)
+
+    def cost_profile(self) -> tuple:
+        """The warmup profiling pass's :class:`ExecutorCost` rows."""
+        return self.profiles
 
     def retrieve_caps(self, bucket: int) -> Optional[tuple]:
         """The (out, seg) capacities retrieve was warmed with for a bucket
@@ -143,6 +180,7 @@ class ExecutorGrid:
                 compile_seconds=self._meta["compile_seconds"],
                 aot_hits=self._hits,
                 aot_misses=self._misses,
+                profiles=self.profiles,
             )
 
 
@@ -165,6 +203,7 @@ def warm_server(
     fold_horizon: int = 1,
     retrieve_caps=None,
     workers: Optional[int] = None,
+    profile: bool = True,
 ) -> WarmupStats:
     """AOT-compile the server's whole reachable read-executor grid.
 
@@ -181,10 +220,17 @@ def warm_server(
       to additionally warm retrieve executors; queries only by default.
     * ``workers`` — thread pool width for the XLA compile stage (tracing
       is sequential; compilation releases the GIL).  0 = fully sequential.
+    * ``profile`` — run the jaxpr collective accountant over the warmed
+      grid: one :class:`~repro.obs.profiling.ExecutorCost` per distinct
+      (kind, depth) program structure at the smallest bucket, combining
+      collective counts/bytes with the compiled executable's XLA cost
+      analysis.  Surfaced on ``grid.cost_profile()`` / ``stats().warmup.
+      profiles`` and as labelled registry gauges.
 
     Attaches the resulting :class:`ExecutorGrid` to the server's batcher
     and records coverage in ``server.stats().warmup``.  Idempotent-ish:
-    re-warming replaces the grid.
+    re-warming replaces the grid (the server registry's AOT counters keep
+    accumulating across re-warms).
     """
     table = server.table
     if server.write_bucket is None:
@@ -277,6 +323,13 @@ def warm_server(
 
     for b, caps in retrieve_caps.items():
         grid._retrieve_caps[int(b)] = (int(caps[0]), int(caps[1]))
+
+    # -- device-cost profiling: jaxpr accountant over the warmed grid ---------
+    if profile:
+        grid.profiles = _profile_grid(
+            table, grid, protos, buckets, retrieve_caps
+        )
+
     grid._meta.update(
         write_bucket=server.write_bucket,
         buckets=buckets,
@@ -284,12 +337,90 @@ def warm_server(
         fold_horizon=fold_horizon,
         compile_seconds=time.perf_counter() - t0,
     )
+    registry = getattr(server, "metrics_registry", None)
+    if registry is not None:
+        grid.bind_registry(registry)
+        registry.gauge(
+            "aot_entries", help="Compiled executables held by the AOT grid."
+        ).set(len(grid))
+        registry.gauge(
+            "aot_compile_seconds", help="Wall-clock cost of the last warmup."
+        ).set(time.perf_counter() - t0)
+        for cost in grid.profiles:
+            labels = {
+                "kind": cost.kind,
+                "bucket": cost.bucket,
+                "depth": cost.depth,
+            }
+            registry.gauge(
+                "executor_all_to_alls",
+                labels=labels,
+                help="all_to_all primitives per executor (jaxpr accountant).",
+            ).set(cost.all_to_alls)
+            registry.gauge(
+                "executor_collective_bytes",
+                labels=labels,
+                help="Per-device bytes moved through collectives per call.",
+            ).set(cost.total_collective_bytes)
     server.batcher.executors = grid
     # Seed the batcher's retrieve working caps so warmed buckets skip the
     # planning round and land on the compiled executables.
     for b, caps in grid._retrieve_caps.items():
         server.batcher._caps.setdefault(b, caps)
     return grid.stats()
+
+
+def _profile_grid(table, grid, protos, buckets, retrieve_caps) -> tuple:
+    """One :class:`ExecutorCost` per (kind, depth) structure, smallest bucket.
+
+    The jaxpr walk is per program *structure* — collective count and bytes
+    do not depend on which fold step grew the base — so fold step 0 at the
+    smallest warmed bucket bounds the tracing cost while still covering
+    every delta depth (the acceptance criterion: the accountant must
+    re-confirm the fused 2-all-to-all budget at each depth).
+    """
+    from repro.core.plans import _proto_queries, state_signature
+    from repro.obs.profiling import profile_executor
+
+    b0 = buckets[0]
+    q = _proto_queries(table, b0)
+    costs = []
+    seen = set()
+    for f, d, st in protos:
+        if f != 0 or d in seen:
+            continue
+        seen.add(d)
+        sig = state_signature(st)
+        handle = grid._peek(("query", b0, (), sig))
+        costs.append(
+            profile_executor(
+                table,
+                st,
+                q,
+                kind="query",
+                compiled=None if handle is None else handle.compiled,
+            )
+        )
+        caps = retrieve_caps.get(b0)
+        if caps is not None:
+            out_cap, seg_cap = int(caps[0]), int(caps[1])
+            rhandle = grid._peek(
+                ("retrieve", b0, (out_cap, seg_cap, False), sig)
+            )
+            costs.append(
+                profile_executor(
+                    table,
+                    st,
+                    q,
+                    kind="retrieve",
+                    compiled=None if rhandle is None else rhandle.compiled,
+                    exec_kwargs={
+                        "out_capacity": out_cap,
+                        "seg_capacity": seg_cap,
+                    },
+                )
+            )
+    return tuple(costs)
 
 
 __all__ = ["ExecutorGrid", "WarmupStats", "warm_server"]

@@ -29,14 +29,16 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Sequence
+from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hashgraph import EMPTY_KEY
 from repro.core.state import as_state
 from repro.core.table import retrieval_to_lists
+from repro.obs.registry import MetricsRegistry, RegistrySnapshot
 from repro.utils import cdiv
 
 
@@ -74,6 +76,21 @@ class PendingBatch:
     seqno: int  # snapshot the batch executed against
     aot: bool  # served by an AOT-warmed executable (no jit dispatch)
 
+    @property
+    def bucket(self) -> int:
+        """The static batch size this execution was padded to."""
+        return int(self.counts.shape[0])
+
+    def wait(self) -> "PendingBatch":
+        """Block until the device result is ready; no host transfer yet.
+
+        Splitting the device wait from :meth:`scatter`'s host-side work is
+        what lets a tracing front end attribute time to the *device* phase
+        separately from the scatter phase.
+        """
+        jax.block_until_ready(self.counts)
+        return self
+
     def scatter(self) -> list:
         c = np.asarray(self.counts)
         return [c[a:b] for a, b in self.bounds]
@@ -93,12 +110,24 @@ class MicroBatcher:
     dispatch lock anyway, so the batch lock costs no real parallelism.
     """
 
+    # metric name -> BatcherStats field, in declaration order
+    _METRICS = {
+        "batch_requests_total": "requests",
+        "batch_executions_total": "batches",
+        "batch_cache_hits_total": "cache_hits",
+        "batch_cache_misses_total": "cache_misses",
+        "batch_overflow_retries_total": "overflow_retries",
+        "batch_keys_served_total": "keys_served",
+        "batch_keys_padded_total": "keys_padded",
+    }
+
     def __init__(
         self,
         table,
         *,
         min_bucket: int = 64,
         max_retries: int = 4,
+        registry: Optional[MetricsRegistry] = None,
     ):
         self.table = table
         self.min_bucket = max(int(min_bucket), table.num_devices)
@@ -111,13 +140,35 @@ class MicroBatcher:
         self._qplans = {}  # bucket -> QueryPlan
         self._rplans = {}  # (bucket, out_cap, seg_cap, per_layer) -> RetrievePlan
         self._caps = {}  # bucket -> (out_cap, seg_cap) current working caps
-        self._requests = 0
-        self._batches = 0
-        self._hits = 0
-        self._misses = 0
-        self._retries = 0
-        self._keys_served = 0
-        self._keys_padded = 0
+        # Counters live in a MetricsRegistry (private by default; a hosting
+        # TableServer rebinds the batcher onto its own via bind_registry so
+        # one registry exports the whole stack).
+        self.metrics_registry = registry if registry is not None else MetricsRegistry()
+        self._make_counters()
+
+    def _make_counters(self) -> None:
+        self._counters = {
+            name: self.metrics_registry.counter(
+                name, help=f"MicroBatcher {field.replace('_', ' ')}."
+            )
+            for name, field in self._METRICS.items()
+        }
+
+    def bind_registry(self, registry: MetricsRegistry) -> None:
+        """Re-home the batcher's counters onto ``registry``.
+
+        Counts accumulated so far carry over (incremented into the new
+        registry's counters), so adopting a standalone batcher into a
+        server loses nothing.
+        """
+        with self._batch_lock:
+            old = self.metrics_registry.snapshot()
+            self.metrics_registry = registry
+            self._make_counters()
+            for name in self._METRICS:
+                carried = int(old.value(name))
+                if carried:
+                    self._counters[name].inc(carried)
 
     # -- shape bucketing -----------------------------------------------------
     def bucket_size(self, total: int) -> int:
@@ -145,8 +196,8 @@ class MicroBatcher:
         flat = np.full(shape, EMPTY_KEY, np.uint32)
         cat = np.concatenate([np.asarray(p) for p in packed], axis=0)
         flat[:off] = cat
-        self._keys_served += off
-        self._keys_padded += bucket - off
+        self._counters["batch_keys_served_total"].inc(off)
+        self._counters["batch_keys_padded_total"].inc(bucket - off)
         return jnp.asarray(flat), bounds
 
     # -- read paths ----------------------------------------------------------
@@ -172,19 +223,19 @@ class MicroBatcher:
             grid = self.executors
             handle = grid.query_handle(st, bucket) if grid is not None else None
             if handle is not None:
-                self._hits += 1
+                self._counters["batch_cache_hits_total"].inc()
                 counts = handle(st, q)
             else:
                 plan = self._qplans.get(bucket)
                 if plan is None:
                     plan = self.table.plan_query(num_queries=bucket)
                     self._qplans[bucket] = plan
-                    self._misses += 1
+                    self._counters["batch_cache_misses_total"].inc()
                 else:
-                    self._hits += 1
+                    self._counters["batch_cache_hits_total"].inc()
                 counts = plan(st, q)
-            self._requests += len(requests)
-            self._batches += 1
+            self._counters["batch_requests_total"].inc(len(requests))
+            self._counters["batch_executions_total"].inc()
             return PendingBatch(
                 counts=counts, bounds=bounds, seqno=seqno, aot=handle is not None
             )
@@ -235,7 +286,7 @@ class MicroBatcher:
                     break
                 caps = (caps[0] * 2, caps[1] * 2)
                 self._caps[bucket] = caps
-                self._retries += 1
+                self._counters["batch_overflow_retries_total"].inc()
                 res, hit = self._exec_retrieve(st, q, bucket, caps, per_layer_counts)
             if int(res.num_dropped) != 0:
                 # Never silent: the per-request scatter has no num_dropped
@@ -248,11 +299,11 @@ class MicroBatcher:
                     "pre-warm the bucket with representative traffic"
                 )
             if hit:
-                self._hits += 1
+                self._counters["batch_cache_hits_total"].inc()
             else:
-                self._misses += 1
-            self._requests += len(requests)
-            self._batches += 1
+                self._counters["batch_cache_misses_total"].inc()
+            self._counters["batch_requests_total"].inc(len(requests))
+            self._counters["batch_executions_total"].inc()
             per_key = retrieval_to_lists(res)
             out = [per_key[a:b] for a, b in bounds]
             if not per_layer_counts:
@@ -280,15 +331,16 @@ class MicroBatcher:
         return plan(st, q), hit
 
     # -- metrics --------------------------------------------------------------
-    def stats(self) -> BatcherStats:
+    def stats(self, snapshot: Optional[RegistrySnapshot] = None) -> BatcherStats:
+        """A :class:`BatcherStats` view over the registry.
+
+        One registry snapshot (single lock acquisition — no tearing across
+        fields); pass a pre-taken ``snapshot`` to fold this view into a
+        larger atomic sample (``TableServer.stats`` does).
+        """
+        snap = snapshot if snapshot is not None else self.metrics_registry.snapshot()
         return BatcherStats(
-            requests=self._requests,
-            batches=self._batches,
-            cache_hits=self._hits,
-            cache_misses=self._misses,
-            overflow_retries=self._retries,
-            keys_served=self._keys_served,
-            keys_padded=self._keys_padded,
+            **{field: int(snap.value(name)) for name, field in self._METRICS.items()}
         )
 
 

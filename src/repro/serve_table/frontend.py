@@ -47,6 +47,9 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.obs.registry import MetricsRegistry, RegistrySnapshot
+from repro.obs.tracing import Tracer
+
 
 @dataclasses.dataclass(frozen=True)
 class QueryResult:
@@ -65,6 +68,7 @@ class _Pending:
     deadline: float  # absolute clock() time the caller needs dispatch by
     enqueued: float  # absolute clock() admission time
     future: Future = dataclasses.field(default_factory=Future)
+    trace: Optional[object] = None  # obs.tracing.Trace when tracing is on
 
 
 class DeadlineBatcher:
@@ -91,6 +95,7 @@ class DeadlineBatcher:
         linger: float = 0.002,
         capacity: int = 4096,
         clock: Callable[[], float] = time.monotonic,
+        registry: Optional[MetricsRegistry] = None,
     ):
         if flush_keys < 1:
             raise ValueError("flush_keys must be >= 1")
@@ -104,10 +109,23 @@ class DeadlineBatcher:
         self._queue: list[_Pending] = []
         self._queued_keys = 0
         self._closed = False
-        self._submitted = 0
-        self._flushed_batches = 0
-        self._flushed_fill = 0  # batches shipped because the bucket filled
-        self._flushed_due = 0  # batches shipped on linger/deadline expiry
+        # Counters live in a registry (private unless a front end shares
+        # its server's); instruments are leaf-locked, safe under _cond.
+        self.metrics_registry = registry if registry is not None else MetricsRegistry()
+        self._c_submitted = self.metrics_registry.counter(
+            "frontend_submitted_total", help="Read requests admitted."
+        )
+        self._c_flushed = self.metrics_registry.counter(
+            "frontend_flushed_batches_total", help="Batches popped for dispatch."
+        )
+        self._c_fill = self.metrics_registry.counter(
+            "frontend_flushed_fill_total",
+            help="Batches shipped because the bucket filled.",
+        )
+        self._c_due = self.metrics_registry.counter(
+            "frontend_flushed_due_total",
+            help="Batches shipped on linger/deadline expiry.",
+        )
 
     # -- admission -------------------------------------------------------------
     def submit(
@@ -116,12 +134,16 @@ class DeadlineBatcher:
         *,
         deadline: Optional[float] = None,
         timeout: Optional[float] = None,
+        trace=None,
     ) -> _Pending:
         """Admit one request; block while the queue is at capacity.
 
         ``deadline`` is an absolute ``clock()`` time (default: admission +
         linger).  Raises :class:`RuntimeError` once closed and
         :class:`TimeoutError` if backpressure outlasts ``timeout``.
+        ``trace`` (an :class:`~repro.obs.tracing.Trace`) rides the request
+        through the pipeline; its admission phase ends here, at enqueue —
+        so backpressure waits are *admission* time, not linger.
         """
         keys = np.asarray(keys)
         size = int(keys.shape[0])
@@ -142,10 +164,13 @@ class DeadlineBatcher:
                 size=size,
                 deadline=now + self.linger if deadline is None else deadline,
                 enqueued=now,
+                trace=trace,
             )
+            if trace is not None:
+                trace.mark("admission", now)
             self._queue.append(req)
             self._queued_keys += size
-            self._submitted += 1
+            self._c_submitted.inc()
             self._cond.notify_all()  # wake the dispatcher (and full-queue waiters)
             return req
 
@@ -182,11 +207,11 @@ class DeadlineBatcher:
             if total >= self.flush_keys:
                 break
         self._queued_keys -= total
-        self._flushed_batches += 1
+        self._c_flushed.inc()
         if total >= self.flush_keys:
-            self._flushed_fill += 1
+            self._c_fill.inc()
         else:
-            self._flushed_due += 1
+            self._c_due.inc()
         self._cond.notify_all()  # free capacity: wake blocked submitters
         return batch
 
@@ -238,14 +263,16 @@ class DeadlineBatcher:
             self._cond.notify_all()
 
     def counters(self) -> dict:
+        snap = self.metrics_registry.snapshot()  # one consistent sample
         with self._cond:
-            return {
-                "submitted": self._submitted,
-                "queued": len(self._queue),
-                "flushed_batches": self._flushed_batches,
-                "flushed_fill": self._flushed_fill,
-                "flushed_due": self._flushed_due,
-            }
+            queued = len(self._queue)
+        return {
+            "submitted": int(snap.value("frontend_submitted_total")),
+            "queued": queued,
+            "flushed_batches": int(snap.value("frontend_flushed_batches_total")),
+            "flushed_fill": int(snap.value("frontend_flushed_fill_total")),
+            "flushed_due": int(snap.value("frontend_flushed_due_total")),
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -281,6 +308,19 @@ class AsyncFrontend:
     remaining future, and joins all threads.
     """
 
+    # frontend counter names -> FrontendStats fields (per-instance views
+    # subtract the at-construction base, the shared registry stays
+    # cumulative across sequential front ends on one server)
+    _METRICS = {
+        "frontend_submitted_total": "submitted",
+        "frontend_completed_total": "completed",
+        "frontend_failed_total": "failed",
+        "frontend_flushed_batches_total": "batches_dispatched",
+        "frontend_flushed_fill_total": "batches_fill",
+        "frontend_flushed_due_total": "batches_due",
+        "frontend_backpressure_waits_total": "write_backpressure_waits",
+    }
+
     def __init__(
         self,
         server,
@@ -292,11 +332,18 @@ class AsyncFrontend:
         write_backlog: int = 64,
         inflight: int = 2,
         clock: Callable[[], float] = time.monotonic,
+        tracing: bool = True,
+        trace_ring: int = 256,
     ):
         self.server = server
         self.default_deadline = float(default_deadline)
         self.write_backlog = int(write_backlog)
         self.clock = clock
+        # One registry for the whole stack: share the server's.
+        self.metrics_registry = server.metrics_registry
+        self.tracer = Tracer(
+            self.metrics_registry, ring=trace_ring, enabled=tracing, clock=clock
+        )
         self.batcher = DeadlineBatcher(
             flush_keys=(
                 server.batcher.min_bucket if flush_keys is None else int(flush_keys)
@@ -304,6 +351,7 @@ class AsyncFrontend:
             linger=linger,
             capacity=capacity,
             clock=clock,
+            registry=self.metrics_registry,
         )
         # dispatcher -> scatter handoff; the bound is the overlap depth AND
         # the cap on un-scattered device work in flight.
@@ -314,11 +362,22 @@ class AsyncFrontend:
         self._scatterer: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._started_writer = False
-        self._completed = 0
-        self._failed = 0
-        self._bp_waits = 0
+        self._c_completed = self.metrics_registry.counter(
+            "frontend_completed_total",
+            help="Read futures resolved (results or errors).",
+        )
+        self._c_failed = self.metrics_registry.counter(
+            "frontend_failed_total",
+            help="Read futures resolved with an exception.",
+        )
+        self._c_bp_waits = self.metrics_registry.counter(
+            "frontend_backpressure_waits_total",
+            help="Writes that blocked on the backlog bound.",
+        )
+        base = self.metrics_registry.snapshot()
+        self._base = {name: int(base.value(name)) for name in self._METRICS}
         self._last_error: Optional[str] = None
-        self._lock = threading.Lock()  # counters
+        self._lock = threading.Lock()  # last_error only
 
     # -- lifecycle ---------------------------------------------------------------
     def start(self) -> "AsyncFrontend":
@@ -378,20 +437,24 @@ class AsyncFrontend:
         undispatched.  Blocks only on admission backpressure (bounded
         queue), never on execution.
         """
-        packed = self.server.table.schema.pack_keys(keys)
+        packed = np.asarray(self.server.table.schema.pack_keys(keys))
         if deadline is None:
             deadline = self.clock() + self.default_deadline
-        req = self.batcher.submit(
-            np.asarray(packed), deadline=deadline, timeout=timeout
-        )
+        trace = self.tracer.start(size=int(packed.shape[0]))
+        try:
+            req = self.batcher.submit(
+                packed, deadline=deadline, timeout=timeout, trace=trace
+            )
+        except Exception:
+            self.tracer.abandon(trace)  # rejected at admission: not a span
+            raise
         return req.future
 
     # -- write path (bounded backlog -> server writer loop) -------------------------
     def _write_backpressure(self, timeout: Optional[float]) -> None:
         if self.server.pending() < self.write_backlog:
             return
-        with self._lock:
-            self._bp_waits += 1
+        self._c_bp_waits.inc()
         deadline = None if timeout is None else time.monotonic() + timeout
         while self.server.pending() >= self.write_backlog:
             if self._stop.is_set():
@@ -439,6 +502,10 @@ class AsyncFrontend:
                     if self.batcher._closed and not self.batcher._queue:
                         return
                 continue
+            now = self.clock()
+            for r in batch:
+                if r.trace is not None:
+                    r.trace.mark("linger", now)
             try:
                 snap = self.server.current()
                 pending = self.server.batcher.dispatch_query(
@@ -447,6 +514,12 @@ class AsyncFrontend:
             except Exception as e:  # dispatch failed: fail this batch, keep serving
                 self._fail_batch(batch, e)
                 continue
+            done = self.clock()
+            for r in batch:
+                if r.trace is not None:
+                    r.trace.mark("dispatch", done)
+                    r.trace.seqno = snap.seqno
+                    r.trace.bucket = pending.bucket
             with self._handoff_cond:
                 self._handoff_cond.wait_for(
                     lambda: len(self._handoff) < self._handoff_bound
@@ -472,41 +545,84 @@ class AsyncFrontend:
                     continue
                 pending, batch = self._handoff.pop(0)
                 self._handoff_cond.notify_all()
+            traced = [r for r in batch if r.trace is not None]
             try:
+                if traced:
+                    # Split the device wait from the host-side scatter so
+                    # the two phases are separately attributable; untraced
+                    # batches keep the single blocking transfer.
+                    pending.wait()
+                    now = self.clock()
+                    for r in traced:
+                        r.trace.mark("device", now)
                 results = pending.scatter()
             except Exception as e:
                 self._fail_batch(batch, e)
                 continue
+            # Futures resolve BEFORE trace bookkeeping: callers see results
+            # at the earliest instant; the scatter mark lands just after.
             for req, counts in zip(batch, results):
                 req.future.set_result(QueryResult(counts=counts, seqno=pending.seqno))
-            with self._lock:
-                self._completed += len(batch)
+            self._c_completed.inc(len(batch))
+            if traced:
+                now = self.clock()
+                for r in traced:
+                    r.trace.mark("scatter", now)
+                    self.tracer.finish(r.trace)
 
     def _fail_batch(self, batch, exc: Exception) -> None:
+        self._c_failed.inc(len(batch))
+        self._c_completed.inc(len(batch))
         with self._lock:
-            self._failed += len(batch)
-            self._completed += len(batch)
             self._last_error = f"{type(exc).__name__}: {exc}"
         for req in batch:
+            self.tracer.abandon(req.trace)  # error paths don't pollute latency
             if not req.future.done():
                 req.future.set_exception(exc)
 
     # -- metrics ------------------------------------------------------------------
-    def stats(self) -> FrontendStats:
-        c = self.batcher.counters()
+    def stats(self, snapshot: Optional[RegistrySnapshot] = None) -> FrontendStats:
+        """Per-instance counter view from ONE registry snapshot.
+
+        A single lock acquisition samples every counter (no tearing);
+        values are this front end's own (the shared registry's cumulative
+        totals minus the at-construction base).
+        """
+        snap = snapshot if snapshot is not None else self.metrics_registry.snapshot()
+        vals = {
+            field: int(snap.value(name)) - self._base[name]
+            for name, field in self._METRICS.items()
+        }
         with self._lock:
-            return FrontendStats(
-                submitted=c["submitted"],
-                completed=self._completed,
-                failed=self._failed,
-                batches_dispatched=c["flushed_batches"],
-                batches_fill=c["flushed_fill"],
-                batches_due=c["flushed_due"],
-                queue_depth=c["queued"],
-                inflight=len(self._handoff),
-                write_backpressure_waits=self._bp_waits,
-                last_error=self._last_error,
-            )
+            last_error = self._last_error
+        return FrontendStats(
+            queue_depth=self.batcher.pending(),
+            inflight=len(self._handoff),
+            last_error=last_error,
+            **vals,
+        )
+
+    def metrics(self, refresh: bool = True) -> RegistrySnapshot:
+        """One atomic sample of the shared registry (front-end view).
+
+        With ``refresh`` (default) the instantaneous gauges — admission
+        queue depth, dispatch/scatter handoff depth, live (unfinished)
+        traces — are re-read first.  The sample includes everything the
+        owning server recorded too (same registry).
+        """
+        if refresh:
+            reg = self.metrics_registry
+            reg.gauge(
+                "frontend_queue_depth", help="Admitted, not yet dispatched."
+            ).set(self.batcher.pending())
+            reg.gauge(
+                "frontend_inflight", help="Dispatched, not yet scattered."
+            ).set(len(self._handoff))
+            reg.gauge(
+                "trace_live",
+                help="Traces started but not finished (0 after drain).",
+            ).set(self.tracer.live())
+        return self.metrics_registry.snapshot()
 
 
 __all__ = [

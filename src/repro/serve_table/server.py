@@ -44,10 +44,11 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import maintenance
+from repro.core import maintenance, plans
 from repro.core.hashgraph import EMPTY_KEY
 from repro.core.maintenance import CompactionPolicy, TableStats
 from repro.core.state import empty_tombstones
+from repro.obs.registry import MetricsRegistry, RegistrySnapshot
 from repro.serve_table.batcher import BatcherStats, MicroBatcher
 from repro.serve_table.snapshot import Snapshot, SnapshotRegistry
 
@@ -96,6 +97,7 @@ class TableServer:
         batcher: Optional[MicroBatcher] = None,
         window: int = 8,
         write_bucket: Optional[int] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.table = table
         self.write_bucket: Optional[int] = None
@@ -124,7 +126,14 @@ class TableServer:
         self.policy = policy or CompactionPolicy(
             max_delta_depth=table.max_deltas
         )
+        # ONE MetricsRegistry per server: the batcher, the AOT grid, any
+        # front ends, and the maintenance recorder all write here, so
+        # metrics()/render_prometheus export the whole stack coherently.
+        # (Attribute named metrics_registry because metrics() is the
+        # snapshot API.)
+        self.metrics_registry = metrics if metrics is not None else MetricsRegistry()
         self.batcher = batcher or MicroBatcher(table)
+        self.batcher.bind_registry(self.metrics_registry)
         self.window = max(1, int(window))
         self._shadow = state
         self._writes: deque = deque()
@@ -135,20 +144,33 @@ class TableServer:
         # and the fold reads the post-step shadow — applied writes are never
         # discarded.  Readers never touch it.
         self._writer_mutex = threading.Lock()
-        self._read_lock = threading.Lock()  # reader counters only
         self._fold_thread: Optional[threading.Thread] = None
         self._writer_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        self._writes_applied = 0
         self._last_error: Optional[str] = None
         self._fold_error: Optional[str] = None
-        self._reads = 0
-        self._read_batches = 0
-        self._folds = 0
-        self._full_compacts = 0
-        self._fold_seconds = 0.0
-        self._last_fold_seconds = 0.0
         self._skew_base = table.skew_fallbacks
+        reg = self.metrics_registry
+        self._c_reads = reg.counter(
+            "serve_reads_total", help="Individual read requests served."
+        )
+        self._c_read_batches = reg.counter(
+            "serve_read_batches_total", help="Coalesced read executions."
+        )
+        self._c_writes_applied = reg.counter(
+            "serve_writes_applied_total",
+            help="Insert/delete/upsert batches applied to the shadow.",
+        )
+        # Same instruments maintenance.record_fold targets (get-or-create).
+        self._c_folds = reg.counter(
+            "maintenance_folds_total", labels={"kind": "fold"}
+        )
+        self._c_full_compacts = reg.counter(
+            "maintenance_folds_total", labels={"kind": "full"}
+        )
+        self._g_last_fold = reg.gauge(
+            "serve_last_fold_seconds", help="Duration of the most recent fold."
+        )
 
     # -- write path (admission) ----------------------------------------------
     def _pad_insert(self, keys, values, bucket: Optional[int] = None):
@@ -342,7 +364,7 @@ class TableServer:
                     if applied:
                         self.registry.publish(self._shadow)
                     raise
-                self._writes_applied += 1
+                self._c_writes_applied.inc()
                 applied += 1
             if applied:
                 self.registry.publish(self._shadow)
@@ -385,9 +407,9 @@ class TableServer:
         try:
             if not self.policy.due(self._shadow.stats()):
                 return False
-            ran = (self._folds, self._full_compacts)
+            ran = self._fold_counts()
             self._fold_shadow()
-            if (self._folds, self._full_compacts) == ran:
+            if self._fold_counts() == ran:
                 return False  # due but nothing actionable: no phantom publish
             self.registry.publish(self._shadow)
             return True
@@ -416,9 +438,13 @@ class TableServer:
         else:
             self._apply_fold(lambda s: maintenance.fold_oldest(s, k), full=False)
 
+    def _fold_counts(self) -> tuple:
+        return (self._c_folds.value, self._c_full_compacts.value)
+
     def _apply_fold(self, fold_fn, *, full: bool) -> None:
         """Run one timed fold of the shadow and attribute the counter."""
         t0 = time.perf_counter()
+        rows_before = maintenance.allocated_rows(self._shadow)
         self._shadow = fold_fn(self._shadow)
         if full and self.write_bucket is not None:
             # compact() resets the tombstone buffer to zero capacity when
@@ -438,12 +464,17 @@ class TableServer:
                         now=ts.now,
                     ),
                 )
-        if full:
-            self._full_compacts += 1
-        else:
-            self._folds += 1
-        self._last_fold_seconds = time.perf_counter() - t0
-        self._fold_seconds += self._last_fold_seconds
+        dt = time.perf_counter() - t0
+        # One recording site per fold: pause time, counter by kind, and
+        # reclaimed rows all land in the shared registry.
+        maintenance.record_fold(
+            self.metrics_registry,
+            kind="full" if full else "fold",
+            seconds=dt,
+            rows_before=rows_before,
+            rows_after=maintenance.allocated_rows(self._shadow),
+        )
+        self._g_last_fold.set(dt)
 
     def fold_async(self, k: Optional[int] = None) -> threading.Thread:
         """Start one background fold of the shadow; reads keep flowing.
@@ -462,7 +493,7 @@ class TableServer:
         def run():
             try:
                 with self._writer_mutex:
-                    ran_before = (self._folds, self._full_compacts)
+                    ran_before = self._fold_counts()
                     if k is None:
                         # Policy-driven: same decision tree as inline
                         # maintenance (including the depth-0
@@ -478,7 +509,7 @@ class TableServer:
                             )
                         else:  # fold-all or incoherent: full rebuild either way
                             self._apply_fold(self.table.compact, full=True)
-                    if (self._folds, self._full_compacts) != ran_before:
+                    if self._fold_counts() != ran_before:
                         self.registry.publish(self._shadow)
             except Exception as e:
                 # A dead fold thread must never be silent: the failure is
@@ -512,9 +543,8 @@ class TableServer:
         """
         snap = self.registry.current()
         out = self.batcher.query_many(snap.state, requests)
-        with self._read_lock:
-            self._reads += len(requests)
-            self._read_batches += 1
+        self._c_reads.inc(len(requests))
+        self._c_read_batches.inc()
         return out, snap.seqno
 
     def retrieve_many(self, requests, *, per_layer_counts: bool = False):
@@ -527,9 +557,8 @@ class TableServer:
         out = self.batcher.retrieve_many(
             snap.state, requests, per_layer_counts=per_layer_counts
         )
-        with self._read_lock:
-            self._reads += len(requests)
-            self._read_batches += 1
+        self._c_reads.inc(len(requests))
+        self._c_read_batches.inc()
         return out, snap.seqno
 
     def query(self, keys) -> np.ndarray:
@@ -663,21 +692,36 @@ class TableServer:
 
     # -- metrics ----------------------------------------------------------------
     def stats(self) -> ServerStats:
-        """A coherent host-side sample of every serving counter."""
+        """A coherent host-side sample of every serving counter.
+
+        The view is a thin wrapper over ONE registry snapshot (a single
+        lock acquisition observes every counter at the same instant — no
+        field-by-field tearing between, say, ``reads`` and
+        ``read_batches``); the shadow's :class:`TableStats` is the usual
+        few-scalar device read on top.
+        """
+        snap = self.metrics_registry.snapshot()
+        hist_fold = snap.histogram("maintenance_fold_seconds", {"kind": "fold"})
+        hist_full = snap.histogram("maintenance_fold_seconds", {"kind": "full"})
+        fold_seconds = (hist_fold.sum if hist_fold else 0.0) + (
+            hist_full.sum if hist_full else 0.0
+        )
         return ServerStats(
             seqno=self.registry.seqno,
             pending_writes=self.pending(),
-            writes_applied=self._writes_applied,
-            reads=self._reads,
-            read_batches=self._read_batches,
-            folds=self._folds,
-            full_compacts=self._full_compacts,
-            fold_seconds_total=self._fold_seconds,
-            last_fold_seconds=self._last_fold_seconds,
+            writes_applied=int(snap.value("serve_writes_applied_total")),
+            reads=int(snap.value("serve_reads_total")),
+            read_batches=int(snap.value("serve_read_batches_total")),
+            folds=int(snap.value("maintenance_folds_total", {"kind": "fold"})),
+            full_compacts=int(
+                snap.value("maintenance_folds_total", {"kind": "full"})
+            ),
+            fold_seconds_total=fold_seconds,
+            last_fold_seconds=float(snap.value("serve_last_fold_seconds", default=0.0)),
             fold_in_flight=self.fold_in_flight,
             skew_fallbacks=self.table.skew_fallbacks - self._skew_base,
             last_error=self._last_error,
-            batcher=self.batcher.stats(),
+            batcher=self.batcher.stats(snapshot=snap),
             shadow=self._shadow.stats(),
             warmup=(
                 self.batcher.executors.stats()
@@ -685,3 +729,46 @@ class TableServer:
                 else None
             ),
         )
+
+    def metrics(self, refresh: bool = True) -> RegistrySnapshot:
+        """One atomic sample of the server's whole metrics registry.
+
+        With ``refresh`` (default) the state-derived gauges — seqno, queue
+        depths, drop tallies, delta depth, the jit dispatch-cache size —
+        are re-read first (costs the shadow's few-scalar device sync);
+        ``refresh=False`` samples the counters as-is.  Feed the result to
+        :func:`repro.obs.render_prometheus` / :func:`repro.obs.render_jsonl`
+        or assert on it directly (``benchmarks.common.assert_clean_run``).
+        """
+        if refresh:
+            reg = self.metrics_registry
+            sh = self._shadow.stats()
+            reg.gauge("serve_seqno", help="Last published snapshot seqno.").set(
+                self.registry.seqno
+            )
+            reg.gauge(
+                "serve_pending_writes", help="Queued, not yet applied writes."
+            ).set(self.pending())
+            reg.gauge(
+                "serve_fold_in_flight", help="1 while a background fold runs."
+            ).set(int(self.fold_in_flight))
+            reg.gauge(
+                "serve_delta_depth", help="Live delta layers on the shadow."
+            ).set(sh.delta_depth)
+            reg.gauge(
+                "serve_dropped_rows",
+                help="Rows lost to capacity anywhere in the stack (want 0).",
+            ).set(sh.num_dropped)
+            reg.gauge(
+                "serve_tombstone_dropped",
+                help="Deletes lost to tombstone capacity (want 0).",
+            ).set(sh.tombstone_dropped)
+            reg.gauge(
+                "serve_skew_fallbacks",
+                help="Inserts routed incoherent by the skew guard.",
+            ).set(self.table.skew_fallbacks - self._skew_base)
+            reg.gauge(
+                "jit_dispatch_cache_size",
+                help="exec_query jit cache entries (flat once warmed).",
+            ).set(plans.exec_query._cache_size())
+        return self.metrics_registry.snapshot()
